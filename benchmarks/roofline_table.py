@@ -1,0 +1,88 @@
+"""The 40-cell roofline table (§Roofline): reads results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.roofline import model_flops, param_count, roofline_terms
+
+
+def load_records(out_dir: str = "results/dryrun") -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(out_dir, "*.json")):
+        r = json.load(open(path))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def cell_row(r: dict) -> dict:
+    rl = roofline_terms(r)
+    cfg = configs.get_config(r["arch"])
+    shape = configs.SHAPES[r["shape"]]
+    mf = model_flops(cfg, shape, r["kind"]) / r["n_devices"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_ms": rl.compute_s * 1e3,
+        "memory_ms": rl.memory_s * 1e3,
+        "collective_ms": rl.collective_s * 1e3,
+        "bottleneck": rl.bottleneck,
+        "compute_frac": rl.compute_fraction,
+        "model_hlo_ratio": mf / max(r["flops"], 1e-9),
+        "hbm_gib": r["bytes_per_device"] / 2**30,
+        "compile_s": r["compile_s"],
+    }
+
+
+def table(emit, out_dir: str = "results/dryrun", mesh: str = "single"):
+    recs = load_records(out_dir)
+    rows = []
+    for arch, shape, ok, why in configs.cells(include_skipped=True):
+        r = recs.get((arch, shape, mesh))
+        if r is None:
+            emit(f"roofline/{arch}/{shape},0,MISSING")
+            continue
+        if r.get("status") == "skipped":
+            emit(f"roofline/{arch}/{shape},0,skipped")
+            continue
+        row = cell_row(r)
+        rows.append(row)
+        emit(f"roofline/{arch}/{shape},0,"
+             f"bottleneck={row['bottleneck']} "
+             f"frac={row['compute_frac']:.3f} "
+             f"c={row['compute_ms']:.1f}ms m={row['memory_ms']:.1f}ms "
+             f"x={row['collective_ms']:.1f}ms hbm={row['hbm_gib']:.1f}GiB "
+             f"useful={row['model_hlo_ratio']:.2f}")
+    if rows:
+        import statistics
+        emit(f"roofline/mean_compute_frac,0,"
+             f"{statistics.mean(r['compute_frac'] for r in rows):.3f}")
+    return rows
+
+
+__all__ = ["cell_row", "load_records", "table"]
+
+
+def markdown(out_dir: str = "results/dryrun", mesh: str = "single") -> str:
+    """Render the roofline table as GitHub markdown (EXPERIMENTS.md)."""
+    recs = load_records(out_dir)
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "compute-frac | MODEL/HLO | HBM/dev | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, ok, why in configs.cells(include_skipped=True):
+        r = recs.get((arch, shape, mesh))
+        if r is None or r.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | *skipped* | — | — "
+                         f"| — |")
+            continue
+        row = cell_row(r)
+        lines.append(
+            f"| {arch} | {shape} | {row['compute_ms']:.1f} ms "
+            f"| {row['memory_ms']:.1f} ms | {row['collective_ms']:.1f} ms "
+            f"| {row['bottleneck']} | {row['compute_frac']:.3f} "
+            f"| {row['model_hlo_ratio']:.2f} | {row['hbm_gib']:.1f} GiB "
+            f"| {row['compile_s']:.0f} s |")
+    return "\n".join(lines)

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator: one section per paper figure + ours.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig11,...]``
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of {fig11,fig12,fig13,roofline,kernels}")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def emit(line: str) -> None:
+        print(line, flush=True)
+
+    emit("name,us_per_call,derived")
+    t0 = time.time()
+    if only is None or "fig11" in only:
+        from benchmarks.paper_figs import fig11
+        fig11(emit)
+    if only is None or "fig12" in only:
+        from benchmarks.paper_figs import fig12
+        fig12(emit)
+    if only is None or "fig12s" in only:
+        from benchmarks.paper_figs import fig12_search
+        fig12_search(emit)
+    if only is None or "fig13" in only:
+        from benchmarks.paper_figs import fig13
+        fig13(emit)
+    if only is None or "kernels" in only:
+        from benchmarks.kernels_bench import run as krun
+        krun(emit)
+    if only is None or "roofline" in only:
+        from benchmarks.roofline_table import table
+        table(emit, args.dryrun_dir)
+    emit(f"benchmarks/total_wall,{(time.time() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

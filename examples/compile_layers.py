@@ -1,0 +1,29 @@
+"""Table-2 sweep: compile all 17 paper layers for both targets and print
+the per-layer cycle summary (the data behind Figs 11/13).
+
+    PYTHONPATH=src python examples/compile_layers.py
+"""
+from repro.core import cost, library, scheduler, targets
+from repro.core.scheduler import ScheduleConfig
+
+OPT = ScheduleConfig(vectorize=True, unroll=True, pack=True)
+BASE = ScheduleConfig(vectorize=False, unroll=False, pack=False)
+
+
+def main() -> None:
+    hvx = targets.get_target("hvx")
+    dnnw = targets.get_target("dnnweaver")
+    print(f"{'layer':22s} {'base(HVX)':>12s} {'opt(HVX)':>12s} "
+          f"{'speedup':>8s} {'opt(DNNW)':>12s}")
+    for spec in library.PAPER_LAYERS:
+        base = cost.cost(scheduler.schedule(spec.build(), hvx, BASE), hvx,
+                         pack=False).cycles
+        opt = cost.cost(scheduler.schedule(spec.build(), hvx, OPT), hvx).cycles
+        dn = cost.cost(scheduler.schedule(spec.build(), dnnw, OPT),
+                       dnnw).cycles
+        print(f"{spec.key:22s} {base:12.0f} {opt:12.0f} {base / opt:8.1f} "
+              f"{dn:12.0f}")
+
+
+if __name__ == "__main__":
+    main()

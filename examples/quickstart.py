@@ -1,0 +1,43 @@
+"""Quickstart: the paper's pipeline end-to-end on two targets.
+
+Defines an ``add`` Codelet (Fig 7), schedules it with the Covenant compiler
+against the HVX and DNNWeaver ACGs (placement -> compute mapping ->
+Algorithm-1 tiling -> transfer insertion -> optimization passes), generates
+macro-mnemonic streams, executes them on the stream machine, and checks
+the result against numpy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import codegen, cost, library, scheduler, stream, targets
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    cdlt = library.gemm(16, 32, 24, in_dtype="u8", acc_dtype="i32")
+    A = rng.integers(0, 8, (16, 24)).astype(np.uint8)
+    B = rng.integers(0, 8, (24, 32)).astype(np.uint8)
+    want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
+
+    for target in ("hvx", "dnnweaver"):
+        acg = targets.get_target(target)
+        sched = scheduler.schedule(cdlt, acg)
+        print(f"=== {target} ===")
+        for note in sched.schedule_notes:
+            print("  ", note)
+        prog = codegen.generate(sched, acg)
+        print(f"   {len(prog)} mnemonics ({prog.bytes} bytes); first 5:")
+        for line in prog.listing(5).splitlines():
+            print("    ", line)
+        res = stream.run_stream(prog, {"A": A, "B": B})
+        ok = np.array_equal(res.outputs["C"], want)
+        rep = cost.cost(sched, acg)
+        print(f"   correct={ok} serial={res.serial_cycles:.0f}cyc "
+              f"packed={res.packed_cycles:.0f}cyc "
+              f"(analytic {rep.cycles:.0f})")
+        assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: continuous-batching decode loop against a
+smoke-size gemma3 (sliding-window KV caches exercised).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-12b",
+         "--smoke", "--requests", "8", "--batch", "4", "--max-new", "16"]))

@@ -1,0 +1,5 @@
+from .store import (latest_step, load_checkpoint, restore_sharded,
+                    save_checkpoint)
+
+__all__ = ["latest_step", "load_checkpoint", "restore_sharded",
+           "save_checkpoint"]

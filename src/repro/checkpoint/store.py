@@ -1,0 +1,131 @@
+"""Checkpointing: atomic npz shards, keep-k retention, elastic reshard.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json, written to a tmp dir
+and ``os.replace``d into place (atomic on POSIX), so a crash mid-write can
+never leave a half checkpoint that resume would pick up.
+
+``restore_sharded`` re-places loaded host arrays onto an arbitrary mesh
+with arbitrary shardings — checkpoints written on a (16,16) mesh restore
+onto (2,16,16), (4,8) or a single CPU device unchanged (elastic scaling):
+the on-disk format is mesh-free (full arrays), and placement happens at
+load via ``jax.device_put`` with the new NamedSharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def _unflatten(like, flat: dict[str, np.ndarray]):
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = _SEP.join(_key_str(k) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = flat[key]
+        want = getattr(leaf, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {want}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+                    keep: int = 3) -> str:
+    """Atomically write ``tree`` (params/opt state/...) for ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": step, "n_arrays": len(flat),
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _list_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, like, step: int | None = None):
+    """Load into host numpy arrays shaped like ``like``.  Returns
+    (tree, step, extra)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return _unflatten(like, flat), step, manifest.get("extra", {})
+
+
+def restore_sharded(ckpt_dir: str, like, shardings, step: int | None = None):
+    """Elastic restore: place arrays with the provided shardings (which may
+    correspond to a completely different mesh than the one that saved)."""
+    host_tree, step, extra = load_checkpoint(ckpt_dir, like, step)
+    placed = jax.tree.map(
+        lambda arr, leaf, sh: jax.device_put(
+            np.asarray(arr, dtype=getattr(leaf, "dtype", arr.dtype)), sh),
+        host_tree, like, shardings)
+    return placed, step, extra
+
+
+__all__ = ["latest_step", "load_checkpoint", "restore_sharded",
+           "save_checkpoint"]

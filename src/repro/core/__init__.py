@@ -1,0 +1,23 @@
+"""Covenant compiler core — the paper's contribution.
+
+Pipeline: ``library`` Codelets -> ``scheduler.schedule`` (placement, compute
+mapping, Algorithm-1 tiling, transfer insertion) -> ``passes`` optimizations
+(vectorize / unroll / pack) -> ``codegen.generate`` macro-mnemonic expansion
+-> ``stream.run_stream`` execution, with ``interp`` (functional) and ``cost``
+(analytic cycles) as cross-checks.  ``targets`` holds the predefined ACGs.
+"""
+from . import (acg, codegen, codelet, cost, dtypes, interp, library, passes,
+               scheduler, semantics, stream, targets)
+from .acg import ACG, Capability, ComputeNode, Edge, MemoryNode, cap, ospec
+from .codelet import Codelet, Compute, Loop, Ref, Surrogate, Transfer, ref, v
+from .dtypes import Dtype, dt
+from .scheduler import ScheduleConfig, schedule
+from .targets import get_target
+
+__all__ = [
+    "ACG", "Capability", "Codelet", "Compute", "ComputeNode", "Dtype",
+    "Edge", "Loop", "MemoryNode", "Ref", "ScheduleConfig", "Surrogate",
+    "Transfer", "acg", "cap", "codegen", "codelet", "cost", "dt", "dtypes",
+    "get_target", "interp", "library", "ospec", "passes", "ref", "schedule",
+    "scheduler", "semantics", "stream", "targets", "v",
+]

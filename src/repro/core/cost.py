@@ -1,0 +1,122 @@
+"""Analytic cycle model over scheduled Codelets.
+
+The model walks the loop tree bottom-up and is *mnemonic-faithful*: its unit
+costs are exactly what the stream simulator charges per mnemonic, so on
+streams small enough to execute instruction-by-instruction the two agree
+(tested).  Per-op costs:
+
+* transfer of ``bits`` over edge ``e`` staged in rows of ``row_bits``:
+  ``ceil(bits / min(coalesce*row_bits, e.bandwidth)) * e.latency`` cycles on
+  the ``mem`` slot class — without unrolling each XFER mnemonic carries one
+  contiguous row (Fig 8b's "Using only 25% of bandwidth!"); unrolling
+  coalesces rows up to the edge bandwidth (§4);
+* compute invocation: ``capability.cycles`` on the node's slot class;
+* loop iteration: ``acg.loop_overhead`` cycles on the ``ctrl`` class
+  (0 on targets with hardware loop sequencers, e.g. DNNWeaver).
+
+With packing enabled (VLIW targets), each loop body's per-iteration cost is
+the modulo-scheduling initiation-interval bound from ``passes.pack_body``;
+without packing, costs sum serially.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .acg import ACG
+from .codelet import Codelet, Compute, Loop, Transfer
+from .passes import pack_body
+
+
+@dataclasses.dataclass
+class CostReport:
+    cycles: float
+    compute_cycles: float
+    transfer_cycles: float
+    overhead_cycles: float
+    compute_invocations: int
+    transfer_mnemonics: int
+    macs: float = 0.0
+
+    @property
+    def breakdown(self) -> str:
+        return (f"{self.cycles:.0f} cyc (compute {self.compute_cycles:.0f}, "
+                f"mem {self.transfer_cycles:.0f}, ctrl {self.overhead_cycles:.0f})")
+
+
+def transfer_cost(cdlt: Codelet, t: Transfer, acg: ACG) -> tuple[float, int]:
+    """(cycles, n_mnemonics) for one execution of a transfer op.
+
+    Uses the same 2-D DMA burst plan the code generator emits
+    (``codegen.xfer_chunks``), so analytic and stream-simulated cycle
+    counts agree exactly on unrollable streams.
+    """
+    from .codegen import xfer_chunks  # local import: codegen imports codelet
+
+    if not t.src.var and t.fill is not None:
+        return 0.0, 0  # accumulator alloc: psums reset in-unit
+    if t.dst_loc is not None:
+        src_loc = cdlt.surrogates[t.src.var].loc
+        dst_loc = t.dst_loc
+    else:
+        src_loc = cdlt.surrogates[t.src.var].loc
+        dst_loc = cdlt.surrogates[t.dst.var].loc
+    e = acg.edge(src_loc, dst_loc)
+    s = cdlt.surrogates[t.src.var] if t.src.var else cdlt.surrogates[t.dst.var]
+    rows = math.prod(t.sizes[:-1]) if len(t.sizes) > 1 else 1
+    row_bits = t.sizes[-1] * s.dtype.bits
+    coalesce = getattr(t, "coalesce", 1)
+    n, _, _ = xfer_chunks(rows, row_bits, coalesce, e.bandwidth)
+    return float(n * e.latency), n
+
+
+def _compute_slot(op: Compute, acg: ACG) -> str:
+    return acg.compute(op.loc).slot or "exec"
+
+
+def cost(cdlt: Codelet, acg: ACG, pack: bool = True) -> CostReport:
+    """Analytic cycles for one execution of the scheduled codelet."""
+    totals = dict(compute=0.0, mem=0.0, ctrl=0.0, invocations=0, xfers=0)
+
+    def body_cost(body: list, trips_ctx: float,
+                  loop_ctrl: float = 0.0) -> float:
+        """Cost of one iteration of ``body``; ``loop_ctrl`` is the enclosing
+        loop's per-iteration bookkeeping, which packs with this body."""
+        ops_meta: list[tuple[str, float]] = []
+        if loop_ctrl:
+            ops_meta.append(("ctrl", loop_ctrl))
+            totals["ctrl"] += loop_ctrl * trips_ctx
+        serial_children = 0.0
+        for item in body:
+            if isinstance(item, Loop):
+                child = body_cost(item.body, trips_ctx * item.trips,
+                                  float(acg.loop_overhead))
+                serial_children += child * item.trips
+            elif isinstance(item, Transfer):
+                cyc, n = transfer_cost(cdlt, item, acg)
+                ops_meta.append(("mem", cyc))
+                totals["mem"] += cyc * trips_ctx
+                totals["xfers"] += int(n * trips_ctx)
+            elif isinstance(item, Compute):
+                cyc = item.cap_obj.cycles if item.cap_obj else 1
+                ops_meta.append((_compute_slot(item, acg), float(cyc)))
+                totals["compute"] += cyc * trips_ctx
+                totals["invocations"] += int(trips_ctx)
+        if pack and acg.issue_slots > 1:
+            own = pack_body(ops_meta, acg)
+        else:
+            own = sum(c for _, c in ops_meta)
+        return own + serial_children
+
+    cycles = body_cost(cdlt.body, 1.0)
+    return CostReport(
+        cycles=cycles,
+        compute_cycles=totals["compute"],
+        transfer_cycles=totals["mem"],
+        overhead_cycles=totals["ctrl"],
+        compute_invocations=totals["invocations"],
+        transfer_mnemonics=totals["xfers"],
+    )
+
+
+__all__ = ["CostReport", "cost", "transfer_cost"]

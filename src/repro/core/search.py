@@ -1,0 +1,141 @@
+"""Search-based schedule optimization (§4's "enabling optimization").
+
+The paper positions Covenant as the substrate that lets Ansor/FlexTensor-
+style search run against NEW accelerators: Algorithm 1 prunes the
+transformation space to *valid* schedules, and the ACG-aware cost model
+replaces on-device measurement.  This module is that loop:
+
+    candidates = valid tilings (Algorithm 1)  x  unroll factors
+    score      = mnemonic-faithful analytic cycles (cost.py)
+    search     = evolutionary: seed with the default heuristic schedule,
+                 mutate tile factors / unroll, keep the elite set.
+
+``search_schedule`` returns the best Codelet found plus the search trace;
+on the paper benchmarks it beats the one-shot heuristic whenever the
+heuristic's greedy tile choice is off the cost-model optimum
+(tests/test_search.py, benchmarks fig12 "+search" row).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+
+from . import cost as cost_mod
+from .acg import ACG
+from .codelet import Codelet
+from .scheduler import (ScheduleConfig, enumerate_tilings, map_compute,
+                        place_operands, plan_operands, validate_tiling)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: Codelet
+    best_cycles: float
+    heuristic_cycles: float
+    evaluated: int
+    trace: list  # (generation, best_cycles)
+
+    @property
+    def gain(self) -> float:
+        return self.heuristic_cycles / max(self.best_cycles, 1e-9)
+
+
+def _materialise(cdlt: Codelet, acg: ACG, tiling: dict, unroll: int,
+                 pack: bool = True) -> Codelet:
+    """Build the full schedule for a given (tiling, unroll) point."""
+    from . import passes
+    from .scheduler import insert_transfers, split_loops
+
+    c = cdlt.clone()
+    place_operands(c, acg)
+    map_compute(c, acg, vectorize=True)
+    split_loops(c, tiling)
+    plans = plan_operands(c, acg)
+    insert_transfers(c, acg, plans)
+    passes.granularize(c, acg)
+    passes.vectorize(c, acg)
+    if unroll > 1:
+        passes.unroll(c, acg, unroll)
+    return c
+
+
+def _score(c: Codelet, acg: ACG, pack: bool = True) -> float:
+    return cost_mod.cost(c, acg, pack=pack).cycles
+
+
+def search_schedule(cdlt: Codelet, acg: ACG, *, generations: int = 6,
+                    population: int = 16, elite: int = 4,
+                    unroll_choices=(1, 2, 4, 8), seed: int = 0,
+                    max_candidates: int = 2000) -> SearchResult:
+    """Evolutionary search over Algorithm-1-valid tilings x unroll factors."""
+    from .scheduler import schedule as heuristic_schedule
+
+    rng = random.Random(seed)
+    # candidate space (validity via Algorithm 1)
+    probe = cdlt.clone()
+    place_operands(probe, acg)
+    map_compute(probe, acg, vectorize=True)
+    plans = plan_operands(probe, acg)
+    tilings = enumerate_tilings(probe, acg, plans,
+                                max_candidates=max_candidates)
+    if not tilings:
+        tilings = enumerate_tilings(probe, acg, plans,
+                                    max_candidates=max_candidates,
+                                    pad_align=True)
+    assert tilings, f"no valid tilings for {cdlt.name} on {acg.name}"
+
+    heur = heuristic_schedule(cdlt, acg, ScheduleConfig())
+    heur_cycles = _score(heur, acg)
+
+    def random_point():
+        return (rng.randrange(len(tilings)), rng.choice(unroll_choices))
+
+    def mutate(pt):
+        ti, u = pt
+        if rng.random() < 0.5:
+            # move one loop's tile factor to a neighbouring divisor
+            ti = min(max(ti + rng.choice((-1, 1, -3, 3)), 0),
+                     len(tilings) - 1)
+        else:
+            u = rng.choice(unroll_choices)
+        return ti, u
+
+    evaluated = {}
+
+    def evaluate(pt):
+        if pt in evaluated:
+            return evaluated[pt]
+        ti, u = pt
+        try:
+            c = _materialise(cdlt, acg, tilings[ti], u)
+            cyc = _score(c, acg)
+        except Exception:
+            cyc = float("inf")
+        evaluated[pt] = cyc
+        return cyc
+
+    pop = [random_point() for _ in range(population)]
+    trace = []
+    best_pt, best_cyc = None, float("inf")
+    for gen in range(generations):
+        scored = sorted(pop, key=evaluate)
+        if evaluate(scored[0]) < best_cyc:
+            best_pt, best_cyc = scored[0], evaluate(scored[0])
+        trace.append((gen, best_cyc))
+        elites = scored[:elite]
+        pop = list(elites)
+        while len(pop) < population:
+            pop.append(mutate(rng.choice(elites)))
+
+    if best_cyc < heur_cycles:
+        best = _materialise(cdlt, acg, tilings[best_pt[0]], best_pt[1])
+        best.note(f"search: tiling={tilings[best_pt[0]]} "
+                  f"unroll={best_pt[1]} cycles={best_cyc:.0f} "
+                  f"(heuristic {heur_cycles:.0f})")
+    else:
+        best, best_cyc = heur, heur_cycles
+    return SearchResult(best, best_cyc, heur_cycles, len(evaluated), trace)
+
+
+__all__ = ["SearchResult", "search_schedule"]

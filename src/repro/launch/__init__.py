@@ -1,0 +1,9 @@
+"""Launch layer: production mesh factory, AOT dry-run, train/serve drivers.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — importing it sets
+XLA_FLAGS (512 fake devices) which must never leak into tests/benches.
+"""
+from . import mesh, specs
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh", "mesh", "specs"]

@@ -1,0 +1,28 @@
+"""Production mesh factory.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialisation.  Single pod: 16x16 = 256 chips, axes
+(data, model).  Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) —
+``pod`` is a second data-parallel axis whose gradient all-reduce crosses
+the DCI; nothing else communicates across pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever devices this host has, as (data, model) — for examples
+    and tests on CPU."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

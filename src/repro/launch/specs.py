@@ -1,0 +1,225 @@
+"""Input specs + sharding assignments for every (arch x shape) dry-run cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.  ``cell_shardings``
+maps params / optimizer state / batch / cache onto the mesh:
+
+* params & optimizer moments: rule engine (runtime/sharding.py) — tensor
+  axes over ``model``, ZeRO weight shard over ``data``;
+* batch dims over ``(pod, data)``;
+* KV caches: batch over data; sequence over ``model`` when kv_heads can't
+  fill it, else kv-heads over ``model``; SSM states: heads over ``model``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data import make_batch_specs
+from repro.models import get_model
+from repro.optim import adamw
+from repro.runtime import sharding as shard_rules
+
+
+def _batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def train_batch_specs(cfg, shape: configs.ShapeSpec, model):
+    seq = shape.seq_len
+    if cfg.family == "vlm":
+        seq = shape.seq_len - cfg.vis_tokens  # image prefix fills the rest
+    return make_batch_specs(cfg, shape.global_batch, seq,
+                            extras=model.extra_inputs)
+
+
+def serve_specs(cfg, shape: configs.ShapeSpec, model):
+    """(prefill batch specs, decode token specs, cache specs)."""
+    bs = shape.global_batch
+    cache = jax.eval_shape(lambda: model.init_cache(bs, shape.seq_len))
+    prefill_batch = {
+        "tokens": jax.ShapeDtypeStruct((bs, shape.seq_len), jnp.int32)}
+    if cfg.family == "vlm":
+        prefill_batch["tokens"] = jax.ShapeDtypeStruct(
+            (bs, shape.seq_len - cfg.vis_tokens), jnp.int32)
+    for name, (shape_fn, dtype) in model.extra_inputs.items():
+        prefill_batch[name] = jax.ShapeDtypeStruct(
+            shape_fn(bs, shape.seq_len), dtype)
+    tokens = jax.ShapeDtypeStruct((bs,), jnp.int32)
+    return prefill_batch, tokens, cache
+
+
+# ---------------------------------------------------------------------------
+# cache sharding
+# ---------------------------------------------------------------------------
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in
+                        ((axes,) if isinstance(axes, str) else axes)]))
+    return dim >= size and dim % size == 0
+
+
+def cache_spec_for(path: str, shape: tuple, cfg, mesh: Mesh) -> P:
+    batch = _batch_axes(mesh)
+    batch = batch if len(batch) != 1 else batch[0]
+
+    def b_if(dim):  # batch axes if they divide, else replicate
+        return batch if _divisible(dim, mesh, batch) else None
+
+    if path.endswith("length"):
+        return P(b_if(shape[0]))
+    if "conv" in path:                       # (..., B, w-1, conv_ch)
+        lead = len(shape) - 3
+        return P(*([None] * lead), b_if(shape[-3]), None,
+                 "model" if _divisible(shape[-1], mesh, "model") else None)
+    if "ssm" in path:                        # (..., B, H, N, Pdim)
+        lead = len(shape) - 4
+        return P(*([None] * lead), b_if(shape[-4]),
+                 "model" if _divisible(shape[-3], mesh, "model") else None,
+                 None, None)
+    if path.endswith("/k") or path.endswith("/v") or path in ("k", "v"):
+        # (..., B, Hkv, S, hd): prefer kv-heads on model; else sequence
+        lead = len(shape) - 4
+        bdim, hdim, sdim = shape[-4], shape[-3], shape[-2]
+        if _divisible(hdim, mesh, "model"):
+            spec = (b_if(bdim), "model", None, None)
+        elif _divisible(sdim, mesh, "model"):
+            spec = (b_if(bdim), None, "model", None)
+        else:
+            spec = (b_if(bdim), None, None, None)
+        return P(*([None] * lead), *spec)
+    return P()
+
+
+def cache_shardings(cache_tree, cfg, mesh: Mesh):
+    def one(path, leaf):
+        pstr = shard_rules._path_str(path)
+        return NamedSharding(mesh, cache_spec_for(pstr, tuple(leaf.shape),
+                                                  cfg, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer():
+    return adamw(1e-4)
+
+
+def cell_abstract(arch: str, shape_name: str, overrides: dict | None = None):
+    """(cfg, model, shape); ``overrides`` are ArchConfig.replace kwargs
+    (perf-iteration knobs: ssm_chunk, attn_block_kv, ...)."""
+    cfg = configs.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = configs.SHAPES[shape_name]
+    model = get_model(cfg)
+    return cfg, model, shape
+
+
+def infer_param_shardings(p_sh):
+    """Inference sharding: drop the ZeRO ``data`` axis from every param
+    spec (weights replicated across data-parallel ranks).  Serving reads
+    weights every step — re-gathering them per token is pure waste; the
+    per-device HBM cost (params/|model|) is the explicit trade."""
+    def fix(ns):
+        spec = tuple(None if ax in ("data", ("data",)) else
+                     (tuple(a for a in ax if a != "data") or None
+                      if isinstance(ax, tuple) else ax)
+                     for ax in tuple(ns.spec))
+        return NamedSharding(ns.mesh, P(*spec))
+    return jax.tree.map(fix, p_sh)
+
+
+def train_cell(arch: str, shape_name: str, mesh: Mesh,
+               microbatches: int = 4, overrides: dict | None = None):
+    """Everything needed to lower a train step: (fn, args_sds, in_sh, out_sh,
+    donate)."""
+    from repro.runtime import make_train_step
+
+    cfg, model, shape = cell_abstract(arch, shape_name, overrides)
+    opt = make_optimizer()
+    params_sds = jax.eval_shape(model.init_params, jax.random.key(0))
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = train_batch_specs(cfg, shape, model)
+
+    p_sh = shard_rules.shardings(params_sds, mesh)
+    o_sh = shard_rules.shardings(opt_sds, mesh)
+    b_sh = shard_rules.batch_shardings(batch_sds, mesh)
+    step = make_train_step(model.loss_fn, opt, microbatches=microbatches,
+                           grad_shardings=p_sh)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P())}
+    return (step, (params_sds, opt_sds, batch_sds),
+            (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh))
+
+
+def serve_auto_policy(cfg, shape) -> bool:
+    """True -> keep ZeRO (data-sharded) weights for serving.
+
+    Measured policy (EXPERIMENTS.md §Perf B): replicated-over-data weights
+    win for dense decode at batch >= 16 (kills per-token weight gathers);
+    data-sharded weights win for MoE (expert tables dwarf the gather),
+    for SSM decode (tiny recurrent state, weight reads dominate) and for
+    tiny batches/models where the data axis is idle anyway."""
+    return (cfg.family in ("moe", "ssm") or shape.global_batch < 16
+            or cfg.d_model <= 1024)
+
+
+def serve_cell(arch: str, shape_name: str, mesh: Mesh, kind: str,
+               overrides: dict | None = None,
+               zero_params: bool | None = None):
+    """kind in {prefill, decode}: (fn, args_sds, in_sh, out_sh).
+    ``zero_params``: True = ZeRO sharding, False = inference (replicated
+    over data), None = measured auto policy."""
+    cfg, model, shape = cell_abstract(arch, shape_name, overrides)
+    if zero_params is None:
+        zero_params = serve_auto_policy(cfg, shape)
+    params_sds = jax.eval_shape(model.init_params, jax.random.key(0))
+    p_sh = shard_rules.shardings(params_sds, mesh)
+    if not zero_params:
+        p_sh = infer_param_shardings(p_sh)
+    pre_batch, tok_sds, cache_sds = serve_specs(cfg, shape, model)
+    c_sh = cache_shardings(cache_sds, cfg, mesh)
+    vocab_ax = "model" if _divisible(cfg.vocab, mesh, "model") else None
+    batch_ax = _squash(_batch_axes(mesh)) \
+        if _divisible(shape.global_batch, mesh, _batch_axes(mesh)) else None
+    logits_sh = NamedSharding(mesh, P(batch_ax, vocab_ax))
+
+    if kind == "prefill":
+        b_sh = shard_rules.batch_shardings(pre_batch, mesh)
+
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        return fn, (params_sds, pre_batch, cache_sds), \
+            (p_sh, b_sh, c_sh), (logits_sh, c_sh)
+
+    tok_sh = NamedSharding(mesh, P(batch_ax))
+
+    def fn(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return fn, (params_sds, tok_sds, cache_sds), \
+        (p_sh, tok_sh, c_sh), (logits_sh, c_sh)
+
+
+def _squash(axes: tuple):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+__all__ = ["cache_shardings", "cache_spec_for", "cell_abstract",
+           "serve_cell", "serve_specs", "train_batch_specs", "train_cell"]

@@ -1,0 +1,112 @@
+"""Model zoo: one pure-JAX implementation per assigned architecture family.
+
+``get_model(cfg)`` returns a uniform ``Model`` API used by the launcher,
+trainer, server and dry-run:
+
+* ``init_params(key)``                      -> param pytree
+* ``loss_fn(params, batch)``                -> scalar loss (train step core)
+* ``init_cache(batch, max_len)``            -> serving cache pytree
+* ``prefill(params, batch, cache)``         -> (last logits (B,V), cache)
+* ``decode_step(params, tokens, cache)``    -> (logits (B,V), cache)
+* ``extra_inputs(shape)``                   -> stub-frontend input specs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import (attention, common, config, mamba, moe, paligemma, ssm,
+               transformer, whisper, zamba)
+from .config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable[[Any], dict]
+    loss_fn: Callable[[dict, dict], jax.Array]
+    init_cache: Callable[[int, int], dict]
+    prefill: Callable[[dict, dict, dict], tuple]
+    decode_step: Callable[[dict, jax.Array, dict], tuple]
+    # stub-frontend extra batch inputs: name -> (shape_fn(batch, seq), dtype)
+    extra_inputs: dict
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense",):
+        return Model(
+            cfg,
+            init_params=lambda key: transformer.init_params(cfg, key),
+            loss_fn=lambda p, b: transformer.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: transformer.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: transformer.prefill(cfg, p, b["tokens"], c),
+            decode_step=lambda p, t, c: transformer.decode_step(cfg, p, t, c),
+            extra_inputs={},
+        )
+    if cfg.family == "moe":
+        return Model(
+            cfg,
+            init_params=lambda key: moe.init_params(cfg, key),
+            loss_fn=lambda p, b: moe.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: moe.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: moe.prefill(cfg, p, b["tokens"], c),
+            decode_step=lambda p, t, c: moe.decode_step(cfg, p, t, c),
+            extra_inputs={},
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg,
+            init_params=lambda key: mamba.init_params(cfg, key),
+            loss_fn=lambda p, b: mamba.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: mamba.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: mamba.prefill(cfg, p, b["tokens"], c),
+            decode_step=lambda p, t, c: mamba.decode_step(cfg, p, t, c),
+            extra_inputs={},
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg,
+            init_params=lambda key: zamba.init_params(cfg, key),
+            loss_fn=lambda p, b: zamba.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: zamba.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: zamba.prefill(cfg, p, b["tokens"], c),
+            decode_step=lambda p, t, c: zamba.decode_step(cfg, p, t, c),
+            extra_inputs={},
+        )
+    if cfg.family == "vlm":
+        return Model(
+            cfg,
+            init_params=lambda key: paligemma.init_params(cfg, key),
+            loss_fn=lambda p, b: paligemma.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: paligemma.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: paligemma.prefill(cfg, p, b["tokens"], c,
+                                                      b["patches"]),
+            decode_step=lambda p, t, c: paligemma.decode_step(cfg, p, t, c),
+            extra_inputs={"patches": (
+                lambda bs, seq: (bs, cfg.vis_tokens, cfg.vis_dim),
+                jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
+                else jnp.float32)},
+        )
+    if cfg.family == "audio":
+        return Model(
+            cfg,
+            init_params=lambda key: whisper.init_params(cfg, key),
+            loss_fn=lambda p, b: whisper.loss_fn(cfg, p, b),
+            init_cache=lambda bs, ml: whisper.init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: whisper.prefill(cfg, p, b["tokens"], c,
+                                                    b["frames"]),
+            decode_step=lambda p, t, c: whisper.decode_step(cfg, p, t, c),
+            extra_inputs={"frames": (
+                lambda bs, seq: (bs, cfg.enc_frames, cfg.d_model),
+                jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
+                else jnp.float32)},
+        )
+    raise KeyError(f"unknown model family {cfg.family!r}")
+
+
+__all__ = ["ArchConfig", "Model", "attention", "common", "config",
+           "get_model", "mamba", "moe", "paligemma", "ssm", "transformer",
+           "whisper", "zamba"]

@@ -1,0 +1,388 @@
+"""Attention implementations used by the model zoo.
+
+Three compilable paths, all GQA-aware:
+
+* ``dense_attention``   — einsum + masked softmax.  Exact, O(S^2) memory;
+  used for short sequences and as the numeric baseline.
+* ``blocked_attention`` — double ``lax.scan`` (q blocks x kv blocks) with
+  online softmax: the pure-jnp twin of the Pallas flash kernel.  O(S·block)
+  memory, so the 32k/500k dry-runs compile without materialising S^2.
+  Sliding windows restrict the inner scan via a banded ``dynamic_slice``.
+* ``decode_attention``  — one-token einsum vs a (possibly sharded) KV cache.
+
+On a real TPU backend these dispatch to the Pallas kernels in
+``repro.kernels`` (same BlockSpec geometry the Covenant tiler picked);
+on CPU/dry-run they stay jnp so GSPMD can partition them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, hq: int) -> jax.Array:
+    hkv = k.shape[1]
+    return k if hkv == hq else jnp.repeat(k, hq // hkv, axis=1)
+
+
+def _shard_heads(q, k, v):
+    """Megatron-style head-parallel constraint (no-op unless the launcher
+    configured activation sharding): move the model axis from the sequence
+    dim onto heads before the attention math, so logits shard over heads
+    instead of replicating."""
+    from .common import shard_act
+
+    spec = ("batch", "heads", None, None)
+    return (shard_act(q, spec), shard_act(k, spec), shard_act(v, spec))
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, scale: float | None = None,
+                    kv_len: jax.Array | None = None) -> jax.Array:
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D)."""
+    b, hq, sq, d = q.shape
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    q, k, v = _shard_heads(q, k, v)
+    sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    m4 = mask[None, None]
+    if kv_len is not None:
+        m4 = m4 & (kpos[None, None, None] < kv_len[:, None, None, None])
+    s = jnp.where(m4, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_offset: int = 0, scale: float | None = None,
+                      block_q: int = 512, block_kv: int = 1024) -> jax.Array:
+    """Flash-structured attention in pure jnp (scan over q and kv blocks)."""
+    b, hq, sq, d = q.shape
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    q, k, v = _shard_heads(q, k, v)
+    sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    nq = -(-sq // bq)
+    nkv = -(-sk // bkv)
+    sq_p, sk_p = nq * bq, nkv * bkv
+    if sq_p != sq:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, sq_p - sq), (0, 0)])
+    if sk_p != sk:
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, sk_p - sk), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, sk_p - sk), (0, 0)])
+    qb = q.reshape(b, hq, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    kb = k.reshape(b, hq, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hq, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qf = qblk.astype(jnp.float32)
+
+        def kv_step(carry, kj_kv):
+            m_prev, l_prev, acc = carry
+            kj, kblk, vblk = kj_kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                           kblk.astype(jnp.float32)) * scale
+            qpos = qi * bq + jnp.arange(bq)[:, None] + q_offset
+            kpos = kj * bkv + jnp.arange(bkv)[None, :]
+            mask = kpos < sk
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.max(s, -1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                           vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hq, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, hq, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, out.astype(qblk.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq_p, d)
+    return out[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention with custom VJP (memory-flat backward)
+# ---------------------------------------------------------------------------
+#
+# Differentiating the double-scan blocked attention stores every kv-block's
+# logits and mask for the backward (stacked (nkv, B, H, bq, bkv) f32 — tens
+# of GiB at 4k seq on a 104B model).  The flash backward instead RECOMPUTES
+# block logits from (q, k, v, out, lse): memory stays O(S·d), compute grows
+# ~1.75x — exactly the Pallas kernel's behaviour on real TPUs.
+
+
+def _fa_fwd_scan(q, k, v, causal, window, q_offset, scale, bq, bkv,
+                 sk_true=None):
+    """Returns (out (B,H,S,D), lse (B,H,S,1)); S,Sk already padded."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nkv = sq // bq, sk // bkv
+    qb = q.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    kb = k.reshape(b, h, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qf = qblk.astype(jnp.float32)
+
+        def kv_step(carry, kj_kv):
+            m_prev, l_prev, acc = carry
+            kj, kblk, vblk = kj_kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                           kblk.astype(jnp.float32)) * scale
+            mask = _block_mask(qi, kj, bq, bkv, q_offset, causal, window,
+                               sk_true)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+            p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                           vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nkv), kb, vb))
+        lsafe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / lsafe).astype(qblk.dtype)
+        lse = m + jnp.log(lsafe)
+        return None, (out, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, d)
+    lse = lseb.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, 1)
+    return out, lse
+
+
+def _block_mask(qi, kj, bq, bkv, q_offset, causal, window, sk_true=None):
+    qpos = qi * bq + jnp.arange(bq)[:, None] + q_offset
+    kpos = kj * bkv + jnp.arange(bkv)[None, :]
+    mask = jnp.ones((bq, bkv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if sk_true is not None:
+        mask &= kpos < sk_true
+    return mask
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_core(q, k, v, causal, window, q_offset, scale, bq, bkv, sk_true):
+    out, _ = _fa_fwd_scan(q, k, v, causal, window if window else None,
+                          q_offset, scale, bq, bkv, sk_true)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, window, q_offset, scale, bq, bkv,
+                    sk_true):
+    out, lse = _fa_fwd_scan(q, k, v, causal, window if window else None,
+                            q_offset, scale, bq, bkv, sk_true)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, window, q_offset, scale, bq, bkv, sk_true,
+                    res, dout):
+    q, k, v, out, lse = res
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nkv = sq // bq, sk // bkv
+    qf = q.astype(jnp.float32)
+    doutf = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out)
+    delta = jnp.sum(doutf * out.astype(jnp.float32), -1, keepdims=True)
+
+    kb = k.reshape(b, h, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    qb = qf.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    dob = doutf.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    lseb = lse.reshape(b, h, nq, bq, 1).transpose(2, 0, 1, 3, 4)
+    delb = delta.reshape(b, h, nq, bq, 1).transpose(2, 0, 1, 3, 4)
+
+    def kv_step(dq_acc, kj_kv):
+        kj, kblk, vblk = kj_kv
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+
+        def q_step(carry, qi_q):
+            dkj, dvj = carry
+            qi, qblk, doblk, lseblk, delblk = qi_q
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kf) * scale
+            mask = _block_mask(qi, kj, bq, bkv, q_offset, causal, window,
+                               sk_true)
+            p = jnp.where(mask[None, None], jnp.exp(s - lseblk), 0.0)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doblk, vf)
+            ds = p * (dp - delblk) * scale
+            dq_blk = jnp.einsum("bhqk,bhkd->bhqd", ds, kf)
+            dkj = dkj + jnp.einsum("bhqk,bhqd->bhkd", ds, qblk)
+            dvj = dvj + jnp.einsum("bhqk,bhqd->bhkd", p, doblk)
+            return (dkj, dvj), dq_blk
+
+        z = jnp.zeros((b, h, bkv, d), jnp.float32)
+        (dkj, dvj), dq_blocks = jax.lax.scan(
+            q_step, (z, z), (jnp.arange(nq), qb, dob, lseb, delb))
+        return dq_acc + dq_blocks, (dkj, dvj)
+
+    dq0 = jnp.zeros((nq, b, h, bq, d), jnp.float32)
+    dq_blocks, (dkb, dvb) = jax.lax.scan(kv_step, dq0,
+                                         (jnp.arange(nkv), kb, vb))
+    dq = dq_blocks.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, d)
+    dk = dkb.transpose(1, 2, 0, 3, 4).reshape(b, h, sk, d)
+    dv = dvb.transpose(1, 2, 0, 3, 4).reshape(b, h, sk, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def fused_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, scale: float | None = None,
+                    block_q: int = 512, block_kv: int = 1024) -> jax.Array:
+    """Flash attention with a recompute-based custom VJP — the jnp twin of
+    the Pallas kernel, memory-flat through the backward."""
+    b, hq, sq, d = q.shape
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    q, k, v = _shard_heads(q, k, v)
+    sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bkv = min(block_kv, sk)
+    nq, nkv = -(-sq // bq), -(-sk // bkv)
+    sq_p, sk_p = nq * bq, nkv * bkv
+    if sq_p != sq:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, sq_p - sq), (0, 0)])
+    if sk_p != sk:
+        k = jnp.pad(k, [(0, 0), (0, 0), (0, sk_p - sk), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, sk_p - sk), (0, 0)])
+        # padded keys must be masked out: fold into causal/window via the
+        # kv-length mask (kpos < sk is implied by causal when q end-aligned;
+        # for safety, rely on q_offset alignment making padded kpos > qpos)
+    out = _flash_core(q, k, v, causal, window, q_offset, scale, bq, bkv, sk)
+    return out[:, :, :sq]
+
+
+def sliding_attention(q, k, v, *, window: int, q_offset: int = 0,
+                      scale: float | None = None,
+                      block_q: int = 512) -> jax.Array:
+    """Banded causal attention: each q block attends to a dynamic kv slice
+    of length block_q + window.  O(S · window) compute AND memory — this is
+    what makes gemma3 local layers / long_500k viable."""
+    b, hq, sq, d = q.shape
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    q, k, v = _shard_heads(q, k, v)
+    sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    nq = -(-sq // bq)
+    sq_p = nq * bq
+    if sq_p != sq:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, sq_p - sq), (0, 0)])
+    span = bq + window  # kv slice covering the block's band
+    qb = q.reshape(b, hq, nq, bq, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        q_start = qi * bq + q_offset
+        start = jnp.maximum(q_start - window, 0)
+        start = jnp.minimum(start, jnp.maximum(sk - span, 0))
+        ks = jax.lax.dynamic_slice_in_dim(k, start, min(span, sk), axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, min(span, sk), axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        qpos = q_start + jnp.arange(bq)[:, None]
+        kpos = start + jnp.arange(min(span, sk))[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos < sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, -1)
+        p = jnp.where(mask[None, None], p, 0.0)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, vs.astype(jnp.float32))
+        return None, out.astype(qblk.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq_p, d)
+    return out[:, :, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                     scale: float | None = None) -> jax.Array:
+    """One new token vs the cache.  q (B,Hq,D), caches (B,Hkv,S,D),
+    kv_len (B,) = number of valid entries INCLUDING the new token.
+
+    Grouped-GQA form: q is reshaped to (B, Hkv, G, D) and the einsums keep
+    the cache's native kv-head count — repeating kv to Hq would force GSPMD
+    to re-shard a sequence-sharded cache onto heads (a full f32 all-gather
+    of the cache per layer per token).  The tiny q/logits tensors replicate
+    instead; softmax reductions over the sharded seq dim psum cheaply."""
+    b, hq, d = q.shape
+    hkv = k_cache.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s)[None, None, None]
+    mask = kpos < kv_len[:, None, None, None]
+    if window:
+        mask &= kpos >= (kv_len[:, None, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def select_attention(cfg, sq: int):
+    """auto: dense below 2k, blocked above (compile-safe for 32k/500k)."""
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "dense" if sq <= 2048 else "fused"
+    if impl == "dense":
+        return functools.partial(dense_attention)
+    if impl == "blocked":
+        return functools.partial(blocked_attention, block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv)
+    return functools.partial(fused_attention, block_q=cfg.attn_block_q,
+                             block_kv=cfg.attn_block_kv)
+
+
+__all__ = ["blocked_attention", "decode_attention", "dense_attention",
+           "fused_attention", "select_attention", "sliding_attention"]

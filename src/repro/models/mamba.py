@@ -1,0 +1,121 @@
+"""Pure Mamba2 (SSD) language model — attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_norm, cdt, cross_entropy, embed_tokens,
+                     init_embed, init_norm, keygen, logits_from_hidden,
+                     shard_act)
+from .config import ArchConfig
+from .ssm import (init_mamba_block, init_mamba_cache, mamba_block,
+                  mamba_block_decode)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    n_groups, per = cfg.layer_groups()
+    assert per == 1
+
+    def group(k):
+        return [{"ln": init_norm(cfg), "mamba": init_mamba_block(cfg, k)}]
+
+    layers = jax.vmap(group)(jax.random.split(next(ks), n_groups))
+    return {"embed": init_embed(cfg, next(ks)), "layers": layers,
+            "ln_f": init_norm(cfg)}
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = embed_tokens(cfg, params["embed"], tokens)
+
+    def group_body(x, gp):
+        lp = gp[0]
+        x = shard_act(x, ("batch", "seq", None))
+        h = apply_norm(cfg, lp["ln"], x)
+        return x + mamba_block(cfg, lp["mamba"], h), None
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat \
+        else group_body
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params["layers"])
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    h = forward(cfg, params, batch["tokens"])
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return cross_entropy(logits, batch["targets"], batch.get("weights"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0,
+               dtype=None) -> dict:
+    n_groups, _ = cfg.layer_groups()
+    one = init_mamba_cache(cfg, batch)
+    layers = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), one)
+    return {"layers": layers, "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, cache: dict
+            ) -> tuple[jax.Array, dict]:
+    """Run the prompt through the chunked SSD, materialising per-layer
+    (conv, ssm) states for decode."""
+    from .ssm import _gated_norm, _split_proj, ssd_chunked
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+
+    def group_body(x, xs):
+        gp, _cache_in = xs
+        lp = gp[0]
+        h = apply_norm(cfg, lp["ln"], x)
+        p = lp["mamba"]
+        di, g, n, hh, hp = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                            cfg.ssm_nheads, cfg.ssm_headdim)
+        zxbcdt = h @ p["in_proj"].astype(h.dtype)
+        z, xbc_x, bc, dt = _split_proj(cfg, zxbcdt)
+        xbc = jnp.concatenate([xbc_x, bc], -1)
+        w = p["conv_w"].astype(h.dtype)
+        xp = jnp.pad(xbc, [(0, 0), (cfg.ssm_conv - 1, 0), (0, 0)])
+        conv = sum(xp[:, i:i + s] * w[i] for i in range(cfg.ssm_conv))
+        conv = jax.nn.silu(conv + p["conv_b"].astype(h.dtype))
+        xin, B, C = jnp.split(conv, [di, di + g * n], -1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, st = ssd_chunked(xin.reshape(b, s, hh, hp), dtv, A,
+                            B.reshape(b, s, g, n), C.reshape(b, s, g, n),
+                            chunk=cfg.ssm_chunk)
+        y = y + xin.reshape(b, s, hh, hp) * p["D"][None, None, :, None]
+        y = _gated_norm(y.reshape(b, s, di), z, p["norm_scale"])
+        out = (y @ p["out_proj"].astype(y.dtype)).astype(x.dtype)
+        # conv state = last (w-1) pre-activation channels
+        conv_state = xbc.astype(jnp.float32)[:, s - (cfg.ssm_conv - 1):]
+        # ssd_chunked returns (b,h,n,p); cache stores (b,h,n,p)
+        return x + out, {"conv": conv_state, "ssm": st}
+
+    x, states = jax.lax.scan(group_body, x,
+                             (params["layers"], cache["layers"]))
+    h = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"layers": states,
+                    "length": cache["length"] + tokens.shape[1]}
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])[:, 0]
+
+    def group_body(x, xs):
+        gp, st = xs
+        lp = gp[0]
+        h = apply_norm(cfg, lp["ln"], x[:, None])[:, 0]
+        out, st2 = mamba_block_decode(cfg, lp["mamba"], h, st)
+        return x + out, st2
+
+    x, states = jax.lax.scan(group_body, x,
+                             (params["layers"], cache["layers"]))
+    h = apply_norm(cfg, params["ln_f"], x[:, None])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"layers": states, "length": cache["length"] + 1}
+
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "prefill"]

@@ -1,0 +1,308 @@
+"""Mixture-of-Experts LM (deepseek-moe fine-grained w/ shared experts,
+olmoe).
+
+The MoE FFN uses sort-based expert dispatch: tokens' top-k assignments are
+sorted by expert, packed into a capacity-bounded (E, C, d) buffer (overflow
+dropped — GShard semantics), pushed through per-expert GEMMs via a batched
+einsum, and scattered back weighted by router probabilities.  Under pjit
+with experts sharded over the ``model`` axis this lowers to exactly the
+all-to-all dispatch pattern of expert parallelism.
+
+Router runs in f32; aux load-balancing loss follows Switch (mean fraction x
+mean probability, scaled by E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as dense
+from .common import (apply_mlp, apply_norm, cdt, cross_entropy, dense_init,
+                     embed_tokens, init_embed, init_mlp, init_norm, keygen,
+                     logits_from_hidden, pdt, shard_act)
+from .config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def init_moe_ffn(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    dtype = pdt(cfg)
+    p = {
+        "router": dense_init(next(ks), (d, e), jnp.float32),
+        "wi": dense_init(next(ks), (e, d, ff), dtype),
+        "wg": dense_init(next(ks), (e, d, ff), dtype),
+        "wo": dense_init(next(ks), (e, ff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, next(ks),
+                               d_ff=(cfg.moe_d_ff or cfg.d_ff) *
+                               cfg.n_shared_experts)
+    return p
+
+
+def _dispatch_block(cfg: ArchConfig, p: dict, xf: jax.Array) -> jax.Array:
+    """Sort-based dispatch + expert GEMMs for one token block (Tb, D)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (Tb,E) f32
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # (Tb,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+    flat_e = eidx.reshape(-1)                                # (Tb*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert group = position - start offset of that expert
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    slot_e = jnp.where(keep, se, e)          # overflow -> dropped row
+    slot_c = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((e + 1, cap, d), cdt(cfg))
+    buf = buf.at[slot_e, slot_c].set(xf[st_].astype(cdt(cfg)))
+    h = jnp.einsum("ecd,edf->ecf", buf[:e], p["wi"].astype(cdt(cfg)))
+    g = jnp.einsum("ecd,edf->ecf", buf[:e], p["wg"].astype(cdt(cfg)))
+    h = jax.nn.silu(h) * g
+    yexp = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cdt(cfg)))
+    # gather back + weighted combine
+    gathered = yexp[jnp.minimum(slot_e, e - 1), slot_c]      # (Tb*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    contrib = gathered.astype(jnp.float32) * sg[:, None]
+    return jnp.zeros((t, d), jnp.float32).at[st_].add(contrib)
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out, aux_loss).  Tokens are dispatched in blocks of
+    ``cfg.moe_block_tokens`` so dispatch state stays bounded at any prompt
+    length (GShard-style grouping)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # Switch aux loss over ALL tokens (cheap: logits only)
+    logits = (xf.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    _, eidx = jax.lax.top_k(probs, k)
+    frac = jnp.mean(jax.nn.one_hot(eidx, e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(frac * jnp.mean(probs, 0)) * k
+
+    tb = min(cfg.moe_block_tokens, t)
+    if t % tb != 0:
+        tb = t  # fallback: single block (tiny inputs)
+    if tb == t:
+        out = _dispatch_block(cfg, p, xf)
+    else:
+        blocks = xf.reshape(t // tb, tb, d)
+
+        def step(_, blk):
+            return None, _dispatch_block(cfg, p, blk)
+
+        _, outs = jax.lax.scan(step, None, blocks)
+        out = outs.reshape(t, d)
+
+    if cfg.n_shared_experts:
+        out = out + apply_mlp(cfg, p["shared"], xf).astype(jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# model = dense transformer with MoE FFN (first_dense leading dense layers)
+# ---------------------------------------------------------------------------
+
+
+def init_layer(cfg: ArchConfig, key, moe: bool) -> dict:
+    ks = keygen(key)
+    return {
+        "ln1": init_norm(cfg),
+        "attn": dense.init_attn(cfg, next(ks)),
+        "ln2": init_norm(cfg),
+        "ffn": init_moe_ffn(cfg, next(ks)) if moe else init_mlp(cfg, next(ks)),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    n_groups, per = cfg.layer_groups()
+    assert per == 1, "moe family scans single layers"
+
+    def group(k):
+        return [init_layer(cfg, k, moe=True)]
+
+    layers = jax.vmap(group)(jax.random.split(next(ks), n_groups))
+    p = {
+        "embed": init_embed(cfg, next(ks)),
+        "layers": layers,
+        "ln_f": init_norm(cfg),
+    }
+    if cfg.first_dense:
+        dk = jax.random.split(next(ks), cfg.first_dense)
+        p["dense_layers"] = [init_layer(cfg, kk, moe=False) for kk in dk]
+    return p
+
+
+def _moe_layer(cfg: ArchConfig, lp: dict, x: jax.Array, positions,
+               moe: bool) -> tuple[jax.Array, jax.Array]:
+    h = apply_norm(cfg, lp["ln1"], x)
+    a = dense.attention_block(cfg, lp["attn"], h, local=False,
+                              positions=positions)
+    x = x + a
+    h = apply_norm(cfg, lp["ln2"], x)
+    if moe:
+        y, aux = moe_ffn(cfg, lp["ffn"], h)
+    else:
+        y, aux = apply_mlp(cfg, lp["ffn"], h), jnp.float32(0)
+    return x + y, aux
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array
+            ) -> tuple[jax.Array, jax.Array]:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    aux_total = jnp.float32(0)
+    for lp in params.get("dense_layers", []):
+        x, _ = _moe_layer(cfg, lp, x, positions, moe=False)
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        x = shard_act(x, ("batch", "seq", None))
+        x, a = _moe_layer(cfg, group_params[0], x, positions, moe=True)
+        return (x, aux + a), None
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat \
+        else group_body
+    (x, aux_total), _ = jax.lax.scan(lambda c, p: body(c, p),
+                                     (x, aux_total), params["layers"])
+    return apply_norm(cfg, params["ln_f"], x), aux_total
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    h, aux = forward(cfg, params, batch["tokens"])
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    ce = cross_entropy(logits, batch["targets"], batch.get("weights"))
+    return ce + 0.01 * aux / max(cfg.n_layers, 1)
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cdt(cfg)
+    n_groups, _ = cfg.layer_groups()
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    c = {"layers": [{
+        "k": jnp.zeros((n_groups, batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((n_groups, batch, hkv, max_len, hd), dtype),
+    }], "length": jnp.zeros((batch,), jnp.int32)}
+    if cfg.first_dense:
+        c["dense"] = [{
+            "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+            "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        } for _ in range(cfg.first_dense)]
+    return c
+
+
+def _attn_prefill_cached(cfg, lp, x, positions, kv):
+    from . import attention as attn_mod
+    from .common import apply_rope, rope_frequencies
+    b, s, _ = x.shape
+    h = apply_norm(cfg, lp["ln1"], x)
+    q, k, v = dense._qkv(cfg, lp["attn"], h)
+    if cfg.rope_frac > 0:
+        sin, cos = rope_frequencies(cfg, positions)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    fn = attn_mod.select_attention(cfg, s)
+    o = fn(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    a = o @ lp["attn"]["wo"].astype(x.dtype)
+    new_kv = {"k": dense._cache_write_prefill(kv["k"], k, s),
+              "v": dense._cache_write_prefill(kv["v"], v, s)}
+    return x + a, h, new_kv
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, cache: dict
+            ) -> tuple[jax.Array, dict]:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    new_dense = []
+    for lp, kv in zip(params.get("dense_layers", []), cache.get("dense", [])):
+        x, _, nkv = _attn_prefill_cached(cfg, lp, x, positions, kv)
+        h = apply_norm(cfg, lp["ln2"], x)
+        x = x + apply_mlp(cfg, lp["ffn"], h)
+        new_dense.append(nkv)
+
+    def group_body(x, xs):
+        group_params, kv_in = xs
+        lp = group_params[0]
+        x, _, nkv = _attn_prefill_cached(cfg, lp, x, positions, kv_in)
+        h = apply_norm(cfg, lp["ln2"], x)
+        y, _ = moe_ffn(cfg, lp["ffn"], h)
+        return x + y, nkv
+
+    x, kv_new = jax.lax.scan(group_body, x,
+                             (params["layers"], cache["layers"][0]))
+    h = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    out = {"layers": [kv_new], "length": cache["length"] + tokens.shape[1]}
+    if new_dense:
+        out["dense"] = new_dense
+    return logits, out
+
+
+def _attn_decode_cached(cfg, lp, x, length, kv):
+    from . import attention as attn_mod
+    from .common import apply_rope, rope_frequencies
+    b = x.shape[0]
+    h = apply_norm(cfg, lp["ln1"], x)
+    q, k, v = dense._qkv(cfg, lp["attn"], h)
+    if cfg.rope_frac > 0:
+        sin, cos = rope_frequencies(cfg, length[:, None])
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    ck = dense._cache_write_token(kv["k"], k[:, :, 0], length)
+    cv = dense._cache_write_token(kv["v"], v[:, :, 0], length)
+    o = attn_mod.decode_attention(q[:, :, 0], ck, cv, length + 1)
+    a = o.reshape(b, 1, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"].astype(x.dtype)
+    return x + a, {"k": ck, "v": cv}
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    length = cache["length"]
+    new_dense = []
+    for lp, kv in zip(params.get("dense_layers", []), cache.get("dense", [])):
+        x, nkv = _attn_decode_cached(cfg, lp, x, length, kv)
+        h = apply_norm(cfg, lp["ln2"], x)
+        x = x + apply_mlp(cfg, lp["ffn"], h)
+        new_dense.append(nkv)
+
+    def group_body(x, xs):
+        group_params, kv_in = xs
+        lp = group_params[0]
+        x, nkv = _attn_decode_cached(cfg, lp, x, length, kv_in)
+        h = apply_norm(cfg, lp["ln2"], x)
+        y, _ = moe_ffn(cfg, lp["ffn"], h)
+        return x + y, nkv
+
+    x, kv_new = jax.lax.scan(group_body, x,
+                             (params["layers"], cache["layers"][0]))
+    h = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    out = {"layers": [kv_new], "length": length + 1}
+    if new_dense:
+        out["dense"] = new_dense
+    return logits, out
+
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "moe_ffn", "prefill"]

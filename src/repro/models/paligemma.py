@@ -1,0 +1,66 @@
+"""PaliGemma-style VLM: SigLIP frontend STUB + projector + gemma decoder.
+
+The modality frontend is a stub per the assignment: ``input_specs`` provides
+precomputed patch embeddings (B, vis_tokens, vis_dim).  The model owns the
+linear projector (vis_dim -> d_model) and the MQA (kv=1) gemma decoder.
+Image tokens form a prefix; text tokens follow (causal over the whole
+stream — prefix-LM masking noted as a deviation in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as dense
+from .common import (cdt, cross_entropy, dense_init, embed_tokens, keygen,
+                     logits_from_hidden, pdt)
+from .config import ArchConfig
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    p = dense.init_params(cfg, next(ks))
+    p["projector"] = dense_init(next(ks), (cfg.vis_dim, cfg.d_model), pdt(cfg))
+    return p
+
+
+def _embed_multimodal(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                      patches: jax.Array) -> jax.Array:
+    """[image prefix | text] embedding stream."""
+    img = patches.astype(cdt(cfg)) @ params["projector"].astype(cdt(cfg))
+    txt = embed_tokens(cfg, params["embed"], tokens)
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            patches: jax.Array) -> jax.Array:
+    embeds = _embed_multimodal(cfg, params, tokens, patches)
+    return dense.forward(cfg, params, tokens, embeds=embeds)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    """CE on the text positions only (image prefix carries no targets)."""
+    h = forward(cfg, params, batch["tokens"], batch["patches"])
+    n_img = batch["patches"].shape[1]
+    h_txt = h[:, n_img:]
+    logits = logits_from_hidden(cfg, params["embed"], h_txt)
+    return cross_entropy(logits, batch["targets"], batch.get("weights"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    return dense.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, cache: dict,
+            patches: jax.Array) -> tuple[jax.Array, dict]:
+    embeds = _embed_multimodal(cfg, params, tokens, patches)
+    return dense.prefill(cfg, params, tokens, cache, embeds=embeds)
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    return dense.decode_step(cfg, params, tokens, cache)
+
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "prefill"]

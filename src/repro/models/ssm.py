@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) block — chunked jnp implementation + one-token decode.
+
+``ssd_chunked`` is the pure-jnp twin of ``kernels/ssd_scan.py`` (same chunk
+decomposition; a single ``lax.scan`` over chunks carries the inter-chunk
+state while doing the quadratic intra-chunk work as chunk-local GEMMs), so
+it lowers under pjit for the 32k/500k dry-runs with O(S·chunk) memory.
+On TPU the Pallas kernel replaces the intra-chunk stage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdt, dense_init, keygen, pdt
+from .config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (sequence parallel within chunk, scan across chunks)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                init_state: jax.Array | None = None):
+    """x (b,s,h,p), dt (b,s,h) (>0), A (h,) (<0), B/C (b,s,g,n).
+    Returns (y (b,s,h,p) f32, final_state (b,h,n,p) f32)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    ck = min(chunk, s)
+    spad = -(-s // ck) * ck
+    if spad != s:
+        pad = [(0, 0), (0, spad - s)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x, pad)
+        dt = jnp.pad(dt, [(0, 0), (0, spad - s), (0, 0)])
+        B = jnp.pad(B, [(0, 0), (0, spad - s), (0, 0), (0, 0)])
+        C = jnp.pad(C, [(0, 0), (0, spad - s), (0, 0), (0, 0)])
+    nck = spad // ck
+    # xs stay in the INPUT dtype and B/C stay UN-repeated (b,s,g,n): folding
+    # the group->head repeat into the scan inputs would materialise
+    # rep x (671 MB for mamba2's g=1, h=80) of f32 per layer; instead the
+    # grouped einsums below broadcast over the head-repeat dim ``r``.
+    xr = x.reshape(b, nck, ck, g, rep, p)
+    dtr = dt.astype(jnp.float32).reshape(b, nck, ck, g, rep)
+    Br = B.reshape(b, nck, ck, g, n)
+    Cr = C.reshape(b, nck, ck, g, n)
+    Af = A.astype(jnp.float32).reshape(g, rep)
+
+    ii = jnp.arange(ck)[:, None]
+    jj = jnp.arange(ck)[None, :]
+    tril = jj <= ii
+
+    def chunk_step(h_prev, inp):
+        xc, dtc, bc, cc = inp      # (b,ck,g,r,p), (b,ck,g,r), (b,ck,g,n) x2
+        xc = xc.astype(jnp.float32)
+        bc = bc.astype(jnp.float32)
+        cc = cc.astype(jnp.float32)
+        da = dtc * Af              # (b,ck,g,r)
+        cum = jnp.cumsum(da, axis=1)
+        seg = cum[:, :, None] - cum[:, None]                # (b,l,m,g,r)
+        # mask INSIDE the exp: where(mask, exp(seg), 0) leaks inf gradients
+        # through the masked branch when seg > 0 (upper triangle)
+        gamma = jnp.exp(jnp.where(tril[None, :, :, None, None], seg, -1e30))
+        xdt = xc * dtc[..., None]
+        cb = jnp.einsum("blgn,bmgn->blmg", cc, bc)          # per group
+        att = cb[..., None] * gamma                         # (b,l,m,g,r)
+        y_intra = jnp.einsum("blmgr,bmgrp->blgrp", att, xdt)
+        # inter-chunk contribution from the incoming state
+        gamma_in = jnp.exp(cum)                             # (b,l,g,r)
+        y_inter = jnp.einsum("blgn,bgrnp->blgrp", cc, h_prev) * \
+            gamma_in[..., None]
+        # end-of-chunk state
+        decay_end = jnp.exp(cum[:, -1:] - cum)              # (b,l,g,r)
+        state = jnp.einsum("blgn,blgrp->bgrnp", bc,
+                           xdt * decay_end[..., None])
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h_prev + state
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, g, rep, n, p), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32).reshape(b, g, rep, n, p)
+    xs = (xr.swapaxes(0, 1), dtr.swapaxes(0, 1), Br.swapaxes(0, 1),
+          Cr.swapaxes(0, 1))
+    h_fin, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, spad, h, p)[:, :s]
+    return y, h_fin.reshape(b, h, n, p)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    g, n, hh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = di + 2 * g * n
+    dtype = pdt(cfg)
+    return {
+        "in_proj": dense_init(next(ks), (d, 2 * di + 2 * g * n + hh), dtype),
+        "conv_w": dense_init(next(ks), (cfg.ssm_conv, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, hh)).astype(jnp.float32),
+        "D": jnp.ones((hh,), jnp.float32),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(next(ks), (di, d), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, g, n, hh = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                    cfg.ssm_nheads)
+    z, x, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * g * n], -1)
+    return z, x, bc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    """Gated RMS: stats in f32, IO in z's dtype (bf16-safe)."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), -1, keepdims=True)
+    out = yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return out.astype(z.dtype)
+
+
+def mamba_block(cfg: ArchConfig, p: dict, u: jax.Array) -> jax.Array:
+    """Full-sequence mamba2 block.  u: (b, s, d_model)."""
+    b, s, d = u.shape
+    di, g, n, hh, hp = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, xbc_x, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xbc_x, bc], -1)      # conv input (b,s,conv_ch)
+    # depthwise causal conv, width ssm_conv — IO in compute dtype (a 4-tap
+    # conv is bf16-safe); keeping these (B,S,ch) surfaces out of f32 halves
+    # the dominant HBM traffic of the block
+    w = p["conv_w"].astype(u.dtype)
+    xp = jnp.pad(xbc, [(0, 0), (cfg.ssm_conv - 1, 0), (0, 0)])
+    conv = sum(xp[:, i:i + s] * w[i] for i in range(cfg.ssm_conv))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(u.dtype))
+    x, B, C = jnp.split(conv, [di, di + g * n], -1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x.reshape(b, s, hh, hp), dtv, A,
+                       B.reshape(b, s, g, n), C.reshape(b, s, g, n),
+                       chunk=cfg.ssm_chunk)
+    y = y + x.reshape(b, s, hh, hp) * p["D"][None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, di), z, p["norm_scale"])
+    return y @ p["out_proj"].astype(y.dtype)
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    di, g, n, hh, hp = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    conv_ch = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((batch, hh, n, hp), jnp.float32),
+    }
+
+
+def mamba_block_decode(cfg: ArchConfig, p: dict, u: jax.Array,
+                       cache: dict) -> tuple[jax.Array, dict]:
+    """One token.  u: (b, d_model); cache: {conv (b,w-1,ch), ssm (b,h,n,p)}."""
+    b, d = u.shape
+    di, g, n, hh, hp = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, xbc_x, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xbc_x, bc], -1).astype(jnp.float32)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], 1)  # (b,w,ch)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) +
+                       p["conv_b"].astype(jnp.float32))
+    x, B, C = jnp.split(conv, [di, di + g * n], -1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,hh)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, hh, hp)
+    Bh = jnp.repeat(B.reshape(b, g, n), hh // g, 1)
+    Ch = jnp.repeat(C.reshape(b, g, n), hh // g, 1)
+    decay = jnp.exp(A[None] * dtv)                        # (b,hh)
+    ssm = cache["ssm"] * decay[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", Bh, xh * dtv[..., None])
+    y = jnp.einsum("bhnp,bhn->bhp", ssm, Ch) + xh * p["D"][None, :, None]
+    y = _gated_norm(y.reshape(b, di), z, p["norm_scale"])
+    out = (y @ p["out_proj"].astype(jnp.float32)).astype(u.dtype)
+    return out, {"conv": hist[:, 1:], "ssm": ssm}
+
+
+__all__ = ["init_mamba_block", "init_mamba_cache", "mamba_block",
+           "mamba_block_decode", "ssd_chunked"]

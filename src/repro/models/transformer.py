@@ -1,0 +1,371 @@
+"""Dense decoder-only transformer LM (grouped layer scan + remat).
+
+Covers command-r-plus (parallel block, GQA), gemma3 (5:1 local:global
+sliding-window pattern, geglu, logit softcap), stablelm (layernorm, partial
+rope), qwen3 (qk-norm) and serves as the PaliGemma text decoder.
+
+Layers are stacked per *group* (the local:global pattern unit) and executed
+with ``lax.scan`` so the compiled HLO is one group body — essential for the
+512-device dry-run of 64-layer models.  ``jax.checkpoint`` wraps the group
+body when ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import (apply_mlp, apply_norm, apply_rope, cdt, cross_entropy,
+                     dense_init, embed_tokens, init_embed, init_mlp,
+                     init_norm, keygen, logits_from_hidden, pdt,
+                     rms_head_norm, rope_frequencies, shard_act)
+from .config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# layer pattern helpers
+# ---------------------------------------------------------------------------
+
+
+def layer_pattern(cfg: ArchConfig) -> list[bool]:
+    """Per-position-in-group flag: True = sliding-window (local) layer."""
+    local, glob = cfg.local_global
+    if local + glob == 0:
+        return [cfg.window > 0]  # uniform window (or full) single layer
+    return [True] * local + [False] * glob
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dtype = pdt(cfg)
+    p = {
+        "wq": dense_init(next(ks), (d, hq * hd), dtype),
+        "wk": dense_init(next(ks), (d, hkv * hd), dtype),
+        "wv": dense_init(next(ks), (d, hkv * hd), dtype),
+        "wo": dense_init(next(ks), (hq * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_layer(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    p = {
+        "ln1": init_norm(cfg),
+        "attn": init_attn(cfg, next(ks)),
+        "mlp": init_mlp(cfg, next(ks)),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = init_norm(cfg)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    n_groups, per = cfg.layer_groups()
+
+    def group(k):
+        gks = jax.random.split(k, per)
+        return [init_layer(cfg, gk) for gk in gks]
+
+    layers = jax.vmap(group)(jax.random.split(next(ks), n_groups))
+    return {
+        "embed": init_embed(cfg, next(ks)),
+        "layers": layers,  # list of per trees, each leaf (n_groups, ...)
+        "ln_f": init_norm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention projection / core
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: jax.Array):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attention_block(cfg: ArchConfig, p: dict, x: jax.Array, *, local: bool,
+                    positions: jax.Array) -> jax.Array:
+    """Full-sequence self attention (train / prefill compute).
+    ``p`` is the attention subtree (wq/wk/wv/wo [+ q_norm/k_norm])."""
+    b, s, d = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rope_frac > 0:
+        sin, cos = rope_frequencies(cfg, positions)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    window = cfg.window if local else 0
+    if window and s > window:
+        o = attn.sliding_attention(q, k, v, window=window,
+                                   block_q=min(cfg.attn_block_q, s))
+    else:
+        fn = attn.select_attention(cfg, s)
+        o = fn(q, k, v, causal=True, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def layer_apply(cfg: ArchConfig, p: dict, x: jax.Array, *, local: bool,
+                positions: jax.Array) -> jax.Array:
+    h = apply_norm(cfg, p["ln1"], x)
+    a = attention_block(cfg, p["attn"], h, local=local, positions=positions)
+    if cfg.parallel_block:  # command-r: attn + mlp from the same norm
+        m = apply_mlp(cfg, p["mlp"], h)
+        return x + a + m
+    x = x + a
+    h = apply_norm(cfg, p["ln2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h)
+
+
+# ---------------------------------------------------------------------------
+# forward (train) — grouped scan
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            embeds: jax.Array | None = None) -> jax.Array:
+    """Returns final hidden states (B,S,D).  ``embeds`` overrides token
+    embedding (PaliGemma prefixes image embeddings)."""
+    x = embeds if embeds is not None else \
+        embed_tokens(cfg, params["embed"], tokens)
+    x = shard_act(x, ("batch", "seq", None))  # boundary: embed -> scan
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    pattern = layer_pattern(cfg)
+
+    def group_body(x, group_params):
+        x = shard_act(x, ("batch", "seq", None))
+        for j, local in enumerate(pattern):
+            x = layer_apply(cfg, group_params[j], x,
+                            local=local, positions=positions)
+        return x, None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params["layers"])
+    x = shard_act(x, ("batch", "seq", None))  # boundary: scan -> loss
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    h = forward(cfg, params, batch["tokens"],
+                embeds=batch.get("embeds"))
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return cross_entropy(logits, batch["targets"], batch.get("weights"))
+
+
+# ---------------------------------------------------------------------------
+# KV cache + serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Local (window) layers get window-sized rolling caches; global layers
+    full ``max_len`` — the memory structure that makes long_500k viable."""
+    dtype = dtype or cdt(cfg)
+    n_groups, per = cfg.layer_groups()
+    pattern = layer_pattern(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    caches = []
+    for local in pattern:
+        slen = min(cfg.window, max_len) if (local and cfg.window) else max_len
+        caches.append({
+            "k": jnp.zeros((n_groups, batch, hkv, slen, hd), dtype),
+            "v": jnp.zeros((n_groups, batch, hkv, slen, hd), dtype),
+        })
+    return {"layers": caches, "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def _cache_write_prefill(cache_k, k, length):
+    """Write a full prefill (B,Hkv,S,D) into the cache.  Rolling caches
+    (w < s) keep the last w tokens at their canonical slots ``t % w`` so
+    decode's rolling writes overwrite the oldest entry."""
+    w = cache_k.shape[2]
+    s = k.shape[2]
+    if s >= w:
+        last = k[:, :, s - w:].astype(cache_k.dtype)
+        return jnp.roll(last, s % w, axis=2)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), 0, axis=2)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            cache: dict, embeds: jax.Array | None = None
+            ) -> tuple[jax.Array, dict]:
+    """Process the prompt; returns (last-token logits (B,V), filled cache)."""
+    x = embeds if embeds is not None else \
+        embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    pattern = layer_pattern(cfg)
+
+    def group_body(x, xs):
+        group_params, kv_in = xs
+        kv_out = []
+        x = shard_act(x, ("batch", "seq", None))
+        for j, local in enumerate(pattern):
+            lp = group_params[j]
+            h = apply_norm(cfg, lp["ln1"], x)
+            q, k, v = _qkv(cfg, lp["attn"], h)
+            if cfg.rope_frac > 0:
+                sin, cos = rope_frequencies(cfg, positions)
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+            window = cfg.window if local else 0
+            if window and s > window:
+                o = attn.sliding_attention(q, k, v, window=window,
+                                           block_q=min(cfg.attn_block_q, s))
+            else:
+                fn = attn.select_attention(cfg, s)
+                o = fn(q, k, v, causal=True, window=window)
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+            a = o @ lp["attn"]["wo"].astype(x.dtype)
+            kv_out.append({
+                "k": _cache_write_prefill(kv_in[j]["k"], k, s),
+                "v": _cache_write_prefill(kv_in[j]["v"], v, s),
+            })
+            if cfg.parallel_block:
+                x = x + a + apply_mlp(cfg, lp["mlp"], h)
+            else:
+                x = x + a
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                x = x + apply_mlp(cfg, lp["mlp"], h2)
+        return x, kv_out
+
+    # scan over groups, threading per-group cache slices
+    kv_by_layer = cache["layers"]
+    x, kv_new = jax.lax.scan(group_body, x, (params["layers"], kv_by_layer))
+    h = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    new_cache = {"layers": kv_new, "length": cache["length"] + s}
+    return logits, new_cache
+
+
+def _scatter_write(cache_k, k_new, pos):
+    b, hkv, w, hd = cache_k.shape
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(hkv)[None, :]
+    return cache_k.at[bi, hi, pos[:, None]].set(k_new.astype(cache_k.dtype))
+
+
+def _cache_write_token(cache_k, k_new, length):
+    """Write one token (B,Hkv,D) at per-batch rolling positions.
+
+    When the cache's sequence dim is sharded over the ``model`` axis (the
+    launch convention for kv_heads < |model|), a naive scatter makes GSPMD
+    replicate the whole cache per step (an all-gather of GBs per layer per
+    token).  In that regime we drop to a shard_map: every seq shard tests
+    whether each row's position lands in its slice and updates locally —
+    zero collective bytes."""
+    from jax.sharding import PartitionSpec as P
+
+    from .common import _ACT_AXES
+
+    b, hkv, w, hd = cache_k.shape
+    pos = length % w
+    seq_ax = _ACT_AXES.get("seq")
+    if not seq_ax:
+        return _scatter_write(cache_k, k_new, pos)
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or seq_ax not in getattr(mesh, "shape", {}):
+        return _scatter_write(cache_k, k_new, pos)
+    n = mesh.shape[seq_ax]
+    if hkv % n == 0 or w % n != 0 or w < n:
+        # launch convention shards kv-heads instead -> scatter is local
+        return _scatter_write(cache_k, k_new, pos)
+    batch_ax = _ACT_AXES.get("batch")
+    baxes = batch_ax if (batch_ax and b % _axes_size(mesh, batch_ax) == 0) \
+        else None
+
+    def body(ck, kn, p):
+        idx = jax.lax.axis_index(seq_ax)
+        s_local = ck.shape[2]
+        local = p - idx * s_local
+        in_range = (local >= 0) & (local < s_local)
+        safe = jnp.clip(local, 0, s_local - 1)
+        bl, hl = ck.shape[0], ck.shape[1]
+        bi = jnp.arange(bl)[:, None]
+        hi = jnp.arange(hl)[None, :]
+        old = ck[bi, hi, safe[:, None]]
+        upd = jnp.where(in_range[:, None, None], kn.astype(ck.dtype), old)
+        return ck.at[bi, hi, safe[:, None]].set(upd)
+
+    cache_spec = P(baxes, None, seq_ax, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(cache_spec, P(baxes, None, None), P(baxes)),
+        out_specs=cache_spec,
+    )(cache_k, k_new.astype(cache_k.dtype), pos)
+
+
+def _axes_size(mesh, axes) -> int:
+    import numpy as _np
+    return int(_np.prod([mesh.shape[a] for a in
+                         ((axes,) if isinstance(axes, str) else axes)]))
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    """One token for every sequence.  tokens: (B,) int32."""
+    b = tokens.shape[0]
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])  # (B,1,D)
+    length = cache["length"]  # (B,)
+    pattern = layer_pattern(cfg)
+
+    def group_body(x, xs):
+        group_params, kv_in = xs
+        kv_out = []
+        for j, local in enumerate(pattern):
+            lp = group_params[j]
+            h = apply_norm(cfg, lp["ln1"], x)
+            q, k, v = _qkv(cfg, lp["attn"], h)       # (B,H,1,D)
+            if cfg.rope_frac > 0:
+                sin, cos = rope_frequencies(cfg, length[:, None])
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+            ck = _cache_write_token(kv_in[j]["k"], k[:, :, 0], length)
+            cv = _cache_write_token(kv_in[j]["v"], v[:, :, 0], length)
+            kv_out.append({"k": ck, "v": cv})
+            w = ck.shape[2]
+            valid = jnp.minimum(length + 1, w)
+            o = attn.decode_attention(q[:, :, 0], ck, cv, valid)
+            a = o.reshape(b, 1, cfg.n_heads * cfg.hd) @ \
+                lp["attn"]["wo"].astype(x.dtype)
+            if cfg.parallel_block:
+                x = x + a + apply_mlp(cfg, lp["mlp"], h)
+            else:
+                x = x + a
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                x = x + apply_mlp(cfg, lp["mlp"], h2)
+        return x, kv_out
+
+    x, kv_new = jax.lax.scan(group_body, x, (params["layers"],
+                                             cache["layers"]))
+    h = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"layers": kv_new, "length": length + 1}
+
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params",
+           "layer_pattern", "loss_fn", "prefill"]

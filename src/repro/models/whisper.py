@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend STUB).
+
+``input_specs`` provides precomputed mel-frame embeddings
+(B, enc_frames, d_model) — the conv frontend is a stub per the assignment.
+Encoder: bidirectional self-attention.  Decoder: causal self-attention +
+cross-attention over the encoder output; decode caches both the growing
+self-KV and the static cross-KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .common import (apply_mlp, apply_norm, apply_rope, cdt, cross_entropy,
+                     dense_init, embed_tokens, init_embed, init_mlp,
+                     init_norm, keygen, logits_from_hidden, pdt,
+                     rope_frequencies, shard_act)
+from .config import ArchConfig
+from .transformer import (_cache_write_prefill, _cache_write_token, _qkv,
+                          init_attn)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+
+    def enc_layer(k):
+        kk = keygen(k)
+        return [{"ln1": init_norm(cfg), "attn": init_attn(cfg, next(kk)),
+                 "ln2": init_norm(cfg), "mlp": init_mlp(cfg, next(kk))}]
+
+    def dec_layer(k):
+        kk = keygen(k)
+        return [{"ln1": init_norm(cfg), "attn": init_attn(cfg, next(kk)),
+                 "lnx": init_norm(cfg), "xattn": init_attn(cfg, next(kk)),
+                 "ln2": init_norm(cfg), "mlp": init_mlp(cfg, next(kk))}]
+
+    enc = jax.vmap(enc_layer)(jax.random.split(next(ks), cfg.enc_layers))
+    dec = jax.vmap(dec_layer)(jax.random.split(next(ks), cfg.n_layers))
+    return {
+        "embed": init_embed(cfg, next(ks)),
+        "pos_enc": dense_init(next(ks), (cfg.enc_frames, cfg.d_model),
+                              pdt(cfg)),
+        "enc_layers": enc,
+        "enc_ln_f": init_norm(cfg),
+        "dec_layers": dec,
+        "ln_f": init_norm(cfg),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_frames, d_model) stub embeddings -> encoder states."""
+    x = frames.astype(cdt(cfg)) + params["pos_enc"].astype(cdt(cfg))[None]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, gp):
+        lp = gp[0]
+        x = shard_act(x, ("batch", "seq", None))
+        h = apply_norm(cfg, lp["ln1"], x)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        fn = attn_mod.select_attention(cfg, s)
+        o = fn(q, k, v, causal=False)   # bidirectional
+        b = x.shape[0]
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+        x = x + o @ lp["attn"]["wo"].astype(x.dtype)
+        h = apply_norm(cfg, lp["ln2"], x)
+        return x + apply_mlp(cfg, lp["mlp"], h), None
+
+    fn_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, p: fn_body(c, p), x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_ln_f"], x)
+
+
+def _cross_attend(cfg, lp, x, enc_k, enc_v):
+    b, s, _ = x.shape
+    h = apply_norm(cfg, lp["lnx"], x)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ lp["xattn"]["wq"].astype(h.dtype)).reshape(b, s, hq, hd
+                                                        ).transpose(0, 2, 1, 3)
+    fn = attn_mod.select_attention(cfg, s)
+    o = fn(q, enc_k, enc_v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return o @ lp["xattn"]["wo"].astype(h.dtype)
+
+
+def _enc_kv(cfg, lp, enc):
+    b, se, _ = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc @ lp["xattn"]["wk"].astype(enc.dtype)).reshape(
+        b, se, hkv, hd).transpose(0, 2, 1, 3)
+    v = (enc @ lp["xattn"]["wv"].astype(enc.dtype)).reshape(
+        b, se, hkv, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def decode_train(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                 enc: jax.Array) -> jax.Array:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    def body(x, gp):
+        lp = gp[0]
+        x = shard_act(x, ("batch", "seq", None))
+        h = apply_norm(cfg, lp["ln1"], x)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        sin, cos = rope_frequencies(cfg, positions)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+        fn = attn_mod.select_attention(cfg, s)
+        o = fn(q, k, v, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+        x = x + o @ lp["attn"]["wo"].astype(x.dtype)
+        ek, ev = _enc_kv(cfg, lp, enc)
+        x = x + _cross_attend(cfg, lp, x, ek, ev)
+        h = apply_norm(cfg, lp["ln2"], x)
+        return x + apply_mlp(cfg, lp["mlp"], h), None
+
+    fn_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, p: fn_body(c, p), x, params["dec_layers"])
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    enc = encode(cfg, params, batch["frames"])
+    h = decode_train(cfg, params, batch["tokens"], enc)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return cross_entropy(logits, batch["targets"], batch.get("weights"))
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cdt(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    L = cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
+            "v": jnp.zeros((L, batch, hkv, max_len, hd), dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((L, batch, hkv, cfg.enc_frames, hd), dtype),
+            "v": jnp.zeros((L, batch, hkv, cfg.enc_frames, hd), dtype),
+        },
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, cache: dict,
+            frames: jax.Array) -> tuple[jax.Array, dict]:
+    """Encode audio, precompute cross-KV, run the decoder prompt."""
+    enc = encode(cfg, params, frames)
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    def body(x, xs):
+        gp, kv_self = xs
+        lp = gp[0]
+        h = apply_norm(cfg, lp["ln1"], x)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        sin, cos = rope_frequencies(cfg, positions)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+        fn = attn_mod.select_attention(cfg, s)
+        o = fn(q, k, v, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+        x = x + o @ lp["attn"]["wo"].astype(x.dtype)
+        ek, ev = _enc_kv(cfg, lp, enc)
+        x = x + _cross_attend(cfg, lp, x, ek, ev)
+        h = apply_norm(cfg, lp["ln2"], x)
+        x = x + apply_mlp(cfg, lp["mlp"], h)
+        nkv = {"k": _cache_write_prefill(kv_self["k"], k, s),
+               "v": _cache_write_prefill(kv_self["v"], v, s)}
+        return x, (nkv, {"k": ek.astype(kv_self["k"].dtype),
+                         "v": ev.astype(kv_self["v"].dtype)})
+
+    x, (self_new, cross_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"]))
+    h = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"self": self_new, "cross": cross_new,
+                    "length": cache["length"] + s}
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    length = cache["length"]
+    b = tokens.shape[0]
+
+    def body(x, xs):
+        gp, kv_self, kv_cross = xs
+        lp = gp[0]
+        h = apply_norm(cfg, lp["ln1"], x)
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        sin, cos = rope_frequencies(cfg, length[:, None])
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+        ck = _cache_write_token(kv_self["k"], k[:, :, 0], length)
+        cv = _cache_write_token(kv_self["v"], v[:, :, 0], length)
+        o = attn_mod.decode_attention(q[:, :, 0], ck, cv, length + 1)
+        x = x + o.reshape(b, 1, cfg.n_heads * cfg.hd) @ \
+            lp["attn"]["wo"].astype(x.dtype)
+        # cross attention vs static KV
+        hx = apply_norm(cfg, lp["lnx"], x)
+        hq, hd = cfg.n_heads, cfg.hd
+        qx = (hx @ lp["xattn"]["wq"].astype(hx.dtype)).reshape(
+            b, 1, hq, hd).transpose(0, 2, 1, 3)
+        se = kv_cross["k"].shape[2]
+        ox = attn_mod.decode_attention(
+            qx[:, :, 0], kv_cross["k"], kv_cross["v"],
+            jnp.full((b,), se, jnp.int32))
+        x = x + ox.reshape(b, 1, hq * hd) @ lp["xattn"]["wo"].astype(x.dtype)
+        h2 = apply_norm(cfg, lp["ln2"], x)
+        x = x + apply_mlp(cfg, lp["mlp"], h2)
+        return x, {"k": ck, "v": cv}
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    h = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"self": self_new, "cross": cache["cross"],
+                    "length": length + 1}
+
+
+__all__ = ["decode_step", "encode", "init_cache", "init_params", "loss_fn",
+           "prefill"]

@@ -1,0 +1,305 @@
+"""Zamba2 hybrid: Mamba2 backbone with a *shared* transformer block.
+
+Every ``shared_attn_every`` mamba blocks, one shared attention+MLP block
+runs on ``concat(hidden, embed0)`` (width 2·d_model).  The block's weights
+are a single copy reused at every invocation; each invocation adds its own
+low-rank (LoRA) adapter — the Zamba2 paper's parameter-sharing scheme.  Its
+output projects back to d_model and adds to the residual stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .common import (apply_norm, apply_rope, cdt, cross_entropy, dense_init,
+                     embed_tokens, init_embed, init_norm, keygen,
+                     logits_from_hidden, pdt, rope_frequencies, shard_act)
+from .config import ArchConfig
+from .ssm import (init_mamba_block, init_mamba_cache, mamba_block,
+                  mamba_block_decode)
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (width 2*d_model) + per-use LoRA
+# ---------------------------------------------------------------------------
+
+
+def _shared_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    da = 2 * cfg.d_model                 # concat width
+    hd = da // cfg.n_heads
+    return da, hd, cfg.d_ff
+
+
+def init_shared_block(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    da, hd, ff = _shared_dims(cfg)
+    dtype = pdt(cfg)
+    return {
+        "ln": {"scale": jnp.ones((da,), dtype)},
+        "wq": dense_init(next(ks), (da, cfg.n_heads * hd), dtype),
+        "wk": dense_init(next(ks), (da, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(next(ks), (da, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(next(ks), (cfg.n_heads * hd, cfg.d_model), dtype),
+        "wi": dense_init(next(ks), (da, ff), dtype),
+        "wg": dense_init(next(ks), (da, ff), dtype),
+        "wo_mlp": dense_init(next(ks), (ff, cfg.d_model), dtype),
+    }
+
+
+def init_lora(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    da, hd, ff = _shared_dims(cfg)
+    r = cfg.lora_rank
+    dtype = pdt(cfg)
+    return {
+        "qa": dense_init(next(ks), (da, r), dtype),
+        "qb": jnp.zeros((r, cfg.n_heads * hd), dtype),
+        "ia": dense_init(next(ks), (da, r), dtype),
+        "ib": jnp.zeros((r, ff), dtype),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def shared_block_qkv(cfg, sp, lora, h):
+    """h: (B,S,2D) -> q,k,v heads."""
+    b, s, _ = h.shape
+    da, hd, _ = _shared_dims(cfg)
+    wq = sp["wq"].astype(h.dtype)
+    q = h @ wq + (h @ lora["qa"].astype(h.dtype)) @ lora["qb"].astype(h.dtype)
+    k = h @ sp["wk"].astype(h.dtype)
+    v = h @ sp["wv"].astype(h.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def shared_block(cfg: ArchConfig, sp: dict, lora: dict, x: jax.Array,
+                 embed0: jax.Array, positions: jax.Array) -> jax.Array:
+    """Full-sequence shared block; returns the d_model residual update."""
+    h = jnp.concatenate([x, embed0], -1)
+    h = _rms(h, sp["ln"]["scale"])
+    q, k, v = shared_block_qkv(cfg, sp, lora, h)
+    b, s, _ = h.shape
+    da, hd, _ = _shared_dims(cfg)
+    fn = attn_mod.select_attention(cfg, s)
+    o = fn(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    a = o @ sp["wo"].astype(h.dtype)
+    mi = h @ sp["wi"].astype(h.dtype) + \
+        (h @ lora["ia"].astype(h.dtype)) @ lora["ib"].astype(h.dtype)
+    m = (jax.nn.silu(mi) * (h @ sp["wg"].astype(h.dtype))) @ \
+        sp["wo_mlp"].astype(h.dtype)
+    return a + m
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = keygen(key)
+    n_groups, per = cfg.layer_groups()   # per = shared_attn_every
+
+    def group(k):
+        gks = jax.random.split(k, per + 1)
+        mambas = [{"ln": init_norm(cfg), "mamba": init_mamba_block(cfg, gk)}
+                  for gk in gks[:per]]
+        return mambas, init_lora(cfg, gks[-1])
+
+    mamba_layers, loras = jax.vmap(group)(jax.random.split(next(ks), n_groups))
+    return {
+        "embed": init_embed(cfg, next(ks)),
+        "layers": mamba_layers,          # list of per trees, stacked groups
+        "loras": loras,                  # stacked (n_groups, ...)
+        "shared": init_shared_block(cfg, next(ks)),
+        "ln_f": init_norm(cfg),
+    }
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    embed0 = x
+    positions = jnp.arange(tokens.shape[1])
+
+    def group_body(x, xs):
+        mambas, lora = xs
+        x = shard_act(x, ("batch", "seq", None))
+        x = x + shared_block(cfg, params["shared"], lora, x, embed0,
+                             positions)
+        for j in range(len(mambas)):
+            lp = mambas[j]
+            h = apply_norm(cfg, lp["ln"], x)
+            x = x + mamba_block(cfg, lp["mamba"], h)
+        return x, None
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat \
+        else group_body
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x,
+                        (params["layers"], params["loras"]))
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    h = forward(cfg, params, batch["tokens"])
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return cross_entropy(logits, batch["targets"], batch.get("weights"))
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or cdt(cfg)
+    n_groups, per = cfg.layer_groups()
+    da, hd, _ = _shared_dims(cfg)
+    m1 = init_mamba_cache(cfg, batch)
+    mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None, None],
+                                   (n_groups, per) + a.shape).copy(), m1)
+    return {
+        "mamba": mamba,
+        "attn": {
+            "k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_len, hd),
+                           dtype),
+            "v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_len, hd),
+                           dtype),
+        },
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _shared_prefill(cfg, sp, lora, x, embed0, positions, kv):
+    from .transformer import _cache_write_prefill
+    b, s, _ = x.shape
+    h = jnp.concatenate([x, embed0], -1)
+    h = _rms(h, sp["ln"]["scale"])
+    q, k, v = shared_block_qkv(cfg, sp, lora, h)
+    fn = attn_mod.select_attention(cfg, s)
+    o = fn(q, k, v, causal=True)
+    da, hd, _ = _shared_dims(cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    a = o @ sp["wo"].astype(h.dtype)
+    mi = h @ sp["wi"].astype(h.dtype) + \
+        (h @ lora["ia"].astype(h.dtype)) @ lora["ib"].astype(h.dtype)
+    m = (jax.nn.silu(mi) * (h @ sp["wg"].astype(h.dtype))) @ \
+        sp["wo_mlp"].astype(h.dtype)
+    nkv = {"k": _cache_write_prefill(kv["k"], k, s),
+           "v": _cache_write_prefill(kv["v"], v, s)}
+    return a + m, nkv
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, cache: dict
+            ) -> tuple[jax.Array, dict]:
+    from .mamba import prefill as _  # noqa: F401 (doc pointer)
+    x = embed_tokens(cfg, params["embed"], tokens)
+    embed0 = x
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    n_groups, per = cfg.layer_groups()
+
+    def group_body(x, xs):
+        mambas, lora, kv_in, mcache_in = xs
+        upd, nkv = _shared_prefill(cfg, params["shared"], lora, x, embed0,
+                                   positions, kv_in)
+        x = x + upd
+        msts = []
+        for j in range(per):
+            lp = mambas[j]
+            h = apply_norm(cfg, lp["ln"], x)
+            y, st = _mamba_prefill_states(cfg, lp["mamba"], h)
+            x = x + y
+            msts.append(st)
+        mst = jax.tree.map(lambda *a: jnp.stack(a), *msts)
+        return x, (nkv, mst)
+
+    x, (kv_new, m_new) = jax.lax.scan(
+        group_body, x,
+        (params["layers"], params["loras"], cache["attn"], cache["mamba"]))
+    h = apply_norm(cfg, params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"mamba": m_new, "attn": kv_new,
+                    "length": cache["length"] + s}
+
+
+def _mamba_prefill_states(cfg, p, h):
+    """mamba_block + final (conv, ssm) states (shared with mamba.prefill)."""
+    from .ssm import _gated_norm, _split_proj, ssd_chunked
+    b, s, _ = h.shape
+    di, g, n, hh, hp = (cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                        cfg.ssm_nheads, cfg.ssm_headdim)
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    z, xbc_x, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xbc_x, bc], -1)
+    w = p["conv_w"].astype(jnp.float32)
+    xp = jnp.pad(xbc.astype(jnp.float32),
+                 [(0, 0), (cfg.ssm_conv - 1, 0), (0, 0)])
+    conv = sum(xp[:, i:i + s] * w[i] for i in range(cfg.ssm_conv))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    xin, B, C = jnp.split(conv, [di, di + g * n], -1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, st = ssd_chunked(xin.reshape(b, s, hh, hp), dtv, A,
+                        B.reshape(b, s, g, n), C.reshape(b, s, g, n),
+                        chunk=cfg.ssm_chunk)
+    y = y + xin.reshape(b, s, hh, hp) * p["D"][None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, di), z, p["norm_scale"])
+    out = (y @ p["out_proj"].astype(jnp.float32)).astype(h.dtype)
+    conv_state = xbc.astype(jnp.float32)[:, s - (cfg.ssm_conv - 1):]
+    return out, {"conv": conv_state, "ssm": st}
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    from .transformer import _cache_write_token
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    embed0 = x
+    length = cache["length"]
+    b = tokens.shape[0]
+    n_groups, per = cfg.layer_groups()
+    da, hd, _ = _shared_dims(cfg)
+
+    def group_body(x, xs):
+        mambas, lora, kv_in, mst_in = xs
+        h = jnp.concatenate([x, embed0], -1)
+        h = _rms(h, params["shared"]["ln"]["scale"])
+        q, k, v = shared_block_qkv(cfg, params["shared"], lora, h)
+        ck = _cache_write_token(kv_in["k"], k[:, :, 0], length)
+        cv = _cache_write_token(kv_in["v"], v[:, :, 0], length)
+        o = attn_mod.decode_attention(q[:, :, 0], ck, cv, length + 1)
+        a = o.reshape(b, 1, cfg.n_heads * hd) @ \
+            params["shared"]["wo"].astype(h.dtype)
+        mi = h @ params["shared"]["wi"].astype(h.dtype) + \
+            (h @ lora["ia"].astype(h.dtype)) @ lora["ib"].astype(h.dtype)
+        m = (jax.nn.silu(mi) * (h @ params["shared"]["wg"].astype(h.dtype))
+             ) @ params["shared"]["wo_mlp"].astype(h.dtype)
+        x = x + a + m
+        msts = []
+        for j in range(per):
+            lp = mambas[j]
+            hn = apply_norm(cfg, lp["ln"], x)[:, 0]
+            st_j = jax.tree.map(lambda s_: s_[j], mst_in)
+            y, st2 = mamba_block_decode(cfg, lp["mamba"], hn, st_j)
+            x = x + y[:, None]
+            msts.append(st2)
+        mst = jax.tree.map(lambda *arrs: jnp.stack(arrs), *msts)
+        return x, ({"k": ck, "v": cv}, mst)
+
+    x, (kv_new, m_new) = jax.lax.scan(
+        group_body, x,
+        (params["layers"], params["loras"], cache["attn"], cache["mamba"]))
+    h = apply_norm(cfg, params["ln_f"], x)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0]
+    return logits, {"mamba": m_new, "attn": kv_new, "length": length + 1}
+
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "prefill"]

@@ -1,0 +1,7 @@
+from .collect import collect_compiled, collective_bytes
+from .model import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, model_flops,
+                    param_count, roofline_terms)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "collect_compiled",
+           "collective_bytes", "model_flops", "param_count",
+           "roofline_terms"]

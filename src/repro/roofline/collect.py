@@ -1,0 +1,106 @@
+"""Extract roofline terms from a compiled AOT executable.
+
+* ``cost_analysis()``      -> HLO FLOPs + bytes accessed
+* ``memory_analysis()``    -> per-device HBM proof (args/outputs/temps)
+* optimized HLO text       -> collective bytes: summed operand sizes of
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+  (cost_analysis does not report these).
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[8,256,1536]{2,1,0} all-gather(...)" — capture result type +
+# op name; operand types appear inside parens for some ops, so we use the
+# *result* shape per collective (a standard, consistent proxy: AG result =
+# gathered bytes moved; AR result = reduced tensor; A2A result = moved).
+_HLO_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"\(?((?:[a-z0-9]+\[[0-9,]*\][^\s)]*)(?:,\s*[a-z0-9]+\[[0-9,]*\][^\s)]*)*)\)?"
+    r"\s+([a-z\-]+)\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> tuple[float, dict]:
+    """Total collective bytes (per device) + per-op-kind breakdown."""
+    per_kind: dict[str, float] = {}
+    for m in _HLO_RE.finditer(hlo_text):
+        types, op = m.group(1), m.group(2)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        # "-start" variants carry the payload; "-done" repeats the type.
+        if op.endswith("-done"):
+            continue
+        per_kind[kind] = per_kind.get(kind, 0.0) + _shape_bytes(types)
+    return sum(per_kind.values()), per_kind
+
+
+def collect_compiled(compiled, lowered=None) -> dict:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    rec = {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "bytes_per_device": float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)),
+        "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+        "generated_code_bytes": float(
+            getattr(ma, "generated_code_size_in_bytes", 0)),
+    }
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = lowered.as_text() if lowered is not None else ""
+    total, per_kind = collective_bytes(text)
+    rec["collective_breakdown"] = per_kind
+    rec["n_collectives"] = {
+        k: text.count(f" {k}") for k in _COLLECTIVES}
+
+    # trip-count-expanded per-device costs (cost_analysis counts while
+    # bodies once — see hlo_cost.py); these are the roofline inputs.
+    from .hlo_cost import analyze
+    expanded = analyze(text)
+    rec["flops_raw_costanalysis"] = rec.pop("flops")
+    rec["bytes_raw_costanalysis"] = rec.pop("bytes_accessed")
+    rec["collective_bytes_raw"] = total
+    rec["flops"] = expanded["flops"]                 # per device
+    rec["bytes_accessed"] = expanded["bytes"]        # per device
+    rec["collective_bytes"] = expanded["collective_bytes"]  # per device
+    return rec
+
+
+__all__ = ["collect_compiled", "collective_bytes"]

@@ -1,0 +1,137 @@
+"""Three-term roofline model for TPU v5e (targets; container is CPU-only).
+
+    compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective = collective_bytes / (chips x 50e9 B/s ICI link)
+
+HLO FLOPs/bytes/collective-bytes all come from the trip-count-expanded
+parser (hlo_cost.py) over the SPMD per-device module, so every term is
+PER-DEVICE and the chips factor is already folded in — the formulas below
+divide by one chip's peak.  MODEL_FLOPS = 6·N·D for training (fwd+bwd) and
+2·N_active·D for single forward passes; attention FLOPs added explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link (one link direction counted)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the roofline-ideal step spent at peak compute — the
+        score we hillclimb (1.0 = perfectly compute-bound at peak)."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def roofline_terms(record: dict) -> Roofline:
+    # all inputs are per-device (SPMD module, trip-expanded)
+    return Roofline(
+        compute_s=record["flops"] / PEAK_FLOPS,
+        memory_s=record["bytes_accessed"] / HBM_BW,
+        collective_s=record["collective_bytes"] / ICI_BW,
+    )
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (analytic, for the useful-compute ratio)
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg) -> tuple[float, float]:
+    """(total, active-per-token) parameter counts."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.hd
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    total = active = emb
+    if cfg.family in ("dense", "vlm"):
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + \
+            cfg.n_heads * hd * d
+        glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        mlp = glu * d * cfg.d_ff
+        total += L * (attn + mlp)
+        active = total
+        if cfg.family == "vlm":
+            total += cfg.vis_dim * d
+            active = total
+    elif cfg.family == "moe":
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + \
+            cfg.n_heads * hd * d
+        ff = cfg.moe_d_ff or cfg.d_ff
+        expert = 3 * d * ff
+        shared = 3 * d * ff * cfg.n_shared_experts
+        router = d * cfg.n_experts
+        n_moe = L - cfg.first_dense
+        total += L * attn + cfg.first_dense * 3 * d * cfg.d_ff + \
+            n_moe * (cfg.n_experts * expert + shared + router)
+        active = emb + L * attn + cfg.first_dense * 3 * d * cfg.d_ff + \
+            n_moe * (cfg.top_k * expert + shared + router)
+    elif cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_d_inner
+        gn = cfg.ssm_ngroups * cfg.ssm_state
+        mamba = d * (2 * di + 2 * gn + cfg.ssm_nheads) + di * d + \
+            cfg.ssm_conv * (di + 2 * gn)
+        n_mamba = L
+        total += n_mamba * mamba
+        active = total
+        if cfg.family == "hybrid":
+            da = 2 * d
+            hd2 = da // cfg.n_heads
+            shared_blk = da * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd2 + \
+                cfg.n_heads * hd2 * d + 2 * da * cfg.d_ff + cfg.d_ff * d
+            n_groups = L // cfg.shared_attn_every
+            lora = n_groups * cfg.lora_rank * (
+                2 * da + cfg.n_heads * hd2 + cfg.d_ff)
+            total += shared_blk + lora
+            active = total
+    elif cfg.family == "audio":
+        attn = 4 * d * d
+        mlp = 2 * d * cfg.d_ff
+        total += cfg.enc_layers * (attn + mlp) + L * (2 * attn + mlp) + \
+            cfg.enc_frames * d
+        active = total
+    return float(total), float(active)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Analytic useful FLOPs for one step of this cell."""
+    total, active = param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    flops = mult * active * tokens
+    # attention (quadratic part), forward only; x3 for train
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        s = shape.seq_len
+        att = 2 * 2 * shape.global_batch * cfg.n_heads * cfg.hd * (
+            s * s / 2 if kind != "decode" else s)
+        local, glob = cfg.local_global
+        if local + glob > 0 and cfg.window:
+            frac_local = local / (local + glob)
+            att = att * (1 - frac_local) + frac_local * 2 * 2 * \
+                shape.global_batch * cfg.n_heads * cfg.hd * \
+                (s * min(cfg.window, s) if kind != "decode"
+                 else min(cfg.window, s))
+        flops += cfg.n_layers * att * (3 if kind == "train" else 1)
+    return float(flops)
+
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "model_flops",
+           "param_count", "roofline_terms"]

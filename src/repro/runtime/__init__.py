@@ -1,0 +1,9 @@
+from . import collectives, fault_tolerance, sharding, trainstep
+from .fault_tolerance import LoopReport, StragglerMonitor, train_loop
+from .sharding import batch_shardings, shardings, spec_for
+from .trainstep import make_serve_step, make_train_step
+
+__all__ = ["LoopReport", "StragglerMonitor", "batch_shardings",
+           "collectives", "fault_tolerance", "make_serve_step",
+           "make_train_step", "sharding", "shardings", "spec_for",
+           "train_loop", "trainstep"]

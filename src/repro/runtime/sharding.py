@@ -1,0 +1,130 @@
+"""Sharding-rule engine: parameter-path patterns -> PartitionSpec.
+
+MaxText-style logical rules, resolved against the param pytree's key paths.
+Defaults implement the production layout for every model family:
+
+* tensor parallelism over ``model``: attention heads, ffn hidden, experts
+  (EP), vocab;
+* ZeRO-3-style weight sharding over ``data`` on the complementary matrix
+  dim (GSPMD inserts the per-layer all-gathers);
+* everything small (norms, biases, scalars) replicated;
+* batch dims of activations over ``("pod", "data")``.
+
+The leading layer-stack (group) dim of scanned params is automatically
+detected and skipped when matching dims.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# (regex over path, spec builder for the *trailing* non-stacked dims).
+# Specs are given for the logical 2-D (in, out) matrix; stacked leading
+# dims get None.  DATA = ZeRO weight-shard axis, MODEL = tensor axis.
+RULES: list[tuple[str, tuple]] = [
+    (r"embed/tokens$",            ("model", "data")),    # (vocab, d)
+    (r"embed/unembed$",           ("data", "model")),    # (d, vocab)
+    (r"projector$",               (None, "model")),      # (vis, d)
+    (r"pos_enc$",                 (None, None)),
+    (r"attn/w[qkv]$",             ("data", "model")),    # (d, heads*hd)
+    (r"attn/wo$",                 ("model", "data")),    # (heads*hd, d)
+    (r"(xattn)/w[qkv]$",          ("data", "model")),
+    (r"(xattn)/wo$",              ("model", "data")),
+    (r"mlp/w[ig]$",               ("data", "model")),    # (d, ff)
+    (r"mlp/wo$",                  ("model", "data")),    # (ff, d)
+    (r"ffn/router$",              (None, None)),         # small, replicated
+    # dense (non-expert) layers in the MoE family keep 2-D ffn weights
+    (r"dense_layers/.*/ffn/w[ig]$", ("data", "model")),
+    (r"dense_layers/.*/ffn/wo$",  ("model", "data")),
+    (r"ffn/w[ig]$",               ("model", "data", None)),  # (E, d, ff) EP
+    (r"ffn/wo$",                  ("model", None, "data")),  # (E, ff, d)
+    (r"ffn/shared/w[ig]$",        ("data", "model")),
+    (r"ffn/shared/wo$",           ("model", "data")),
+    (r"mamba/in_proj$",           ("data", "model")),
+    (r"mamba/out_proj$",          ("model", "data")),
+    (r"mamba/conv_w$",            (None, "model")),      # (w, conv_ch)
+    (r"mamba/conv_b$",            ("model",)),
+    (r"mamba/(A_log|D|dt_bias)$", ("model",)),
+    (r"mamba/norm_scale$",        ("model",)),
+    (r"shared/w[qkvig]$",         ("data", "model")),    # zamba shared block
+    (r"shared/wo(_mlp)?$",        ("model", "data")),
+    (r"loras?/.*a$",              ("data", None)),
+    (r"loras?/.*b$",              (None, "model")),
+    (r"(wi|wg)$",                 ("data", "model")),    # moe dense fallback
+    (r"wo$",                      ("model", "data")),
+]
+
+
+def spec_for(path: str, shape: tuple[int, ...],
+             rules=None) -> P:
+    """PartitionSpec for one leaf; leading stacked dims padded with None."""
+    rules = rules if rules is not None else RULES
+    for pat, trailing in rules:
+        if re.search(pat, path):
+            t = tuple(trailing)
+            if len(t) > len(shape):
+                t = t[-len(shape):] if len(shape) else ()
+            lead = (None,) * (len(shape) - len(t))
+            spec = lead + t
+            # drop axis names on dims not divisible by the mesh axis (the
+            # caller re-checks against the actual mesh in shardings())
+            return P(*spec)
+    return P()  # replicate (norms, scalars)
+
+
+def shardings(tree, mesh: Mesh, rules=None):
+    """NamedShardings for every leaf of ``tree`` (arrays or SDS)."""
+
+    def one(path, leaf):
+        spec = spec_for(_path_str(path), tuple(leaf.shape), rules)
+        # validate divisibility; drop the axis name where it cannot shard
+        fixed = []
+        for d, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = np.prod([mesh.shape[a] for a in
+                            ((ax,) if isinstance(ax, str) else ax)])
+            fixed.append(ax if d % size == 0 and d >= size else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(n for n in ("pod", "data") if n in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard every batch leaf's dim 0 over (pod, data)."""
+    bs = tuple(batch_spec(mesh))
+
+    def one(leaf):
+        return NamedSharding(mesh, P(*bs, *((None,) * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+__all__ = ["RULES", "batch_spec", "batch_shardings", "replicated",
+           "shardings", "spec_for"]

@@ -1,0 +1,83 @@
+"""Train/serve step builders: pjit-able pure functions with microbatch
+gradient accumulation, donated state, and sharding constraints."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+
+
+def _constrain(tree, shardings):
+    if shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, shardings)
+
+
+def make_loss_with_accum(loss_fn, microbatches: int, grad_shardings=None):
+    """Split the per-device batch into ``microbatches`` chunks and
+    accumulate grads with a scan — activation memory / microbatches.
+    ``grad_shardings`` (param-tree of NamedShardings) pins the accumulator
+    carry: without it GSPMD may replicate per-microbatch grads (an 11.7 GiB
+    f32 embedding grad per layer on 104B models)."""
+    if microbatches <= 1:
+        def simple(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, _constrain(grads, grad_shardings)
+        return simple
+
+    def accum(params, batch):
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(reshape, batch)
+        gfn = jax.value_and_grad(loss_fn)
+
+        def step(carry, mbatch):
+            loss_acc, grads_acc = carry
+            loss, grads = gfn(params, mbatch)
+            grads = _constrain(grads, grad_shardings)
+            return (loss_acc + loss,
+                    _constrain(jax.tree.map(jnp.add, grads_acc, grads),
+                               grad_shardings)), None
+
+        zero = _constrain(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            grad_shardings)
+        (loss, grads), _ = jax.lax.scan(step, (jnp.float32(0), zero), mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    return accum
+
+
+def make_train_step(loss_fn, optimizer: Optimizer, microbatches: int = 1,
+                    grad_shardings=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    grad_fn = make_loss_with_accum(loss_fn, microbatches, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grad_fn(params, batch)
+        new_params, new_state, om = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model):
+    """decode_step as a donated-cache pure function."""
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        return logits, cache
+
+    return serve_step
+
+
+__all__ = ["make_loss_with_accum", "make_serve_step", "make_train_step"]

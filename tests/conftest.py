@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 host
+devices (and only when executed as a script)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_inputs(cdlt, rng, lo=-4, hi=5):
+    """Random integer inputs matching a codelet's inp surrogates."""
+    ins = {}
+    for s in cdlt.surrogates.values():
+        if s.kind == "inp":
+            low = 0 if s.dtype.name.startswith("u") else lo
+            ins[s.name] = rng.integers(low, hi, s.shape).astype(s.dtype.np)
+    return ins

@@ -1,0 +1,153 @@
+"""Code generation + stream machine: functional equivalence, cycle
+agreement with the analytic model, packing legality."""
+import numpy as np
+import pytest
+
+from repro.core import codegen, cost, library, scheduler, stream, targets
+from repro.core.codegen import StreamTooLarge, xfer_chunks
+from repro.core.scheduler import ScheduleConfig
+
+from conftest import random_inputs
+
+CASES = [
+    ("example", lambda: library.gemm(8, 16, 12, in_dtype="i16")),
+    ("example", lambda: library.elementwise("ADD", 25, "i16")),
+    ("hvx", lambda: library.gemm(8, 16, 12, in_dtype="u8")),
+    ("hvx", lambda: library.gemm(8, 8, 8, heads=3, in_dtype="u8")),
+    ("hvx", lambda: library.conv2d(1, 12, 12, 3, 8, 3, 3, 2, name="cc")),
+    ("hvx", lambda: library.relu(37, "i32")),
+    ("dnnweaver", lambda: library.gemm(8, 16, 12, in_dtype="u8")),
+    ("dnnweaver", lambda: library.conv2d(1, 12, 12, 3, 8, 3, 3, 2, name="cd")),
+    ("dnnweaver", lambda: library.elementwise("MUL", 64, "i32")),
+]
+
+
+@pytest.mark.parametrize("target,build", CASES)
+def test_stream_matches_oracle(target, build, rng):
+    acg = targets.get_target(target)
+    cdlt = build()
+    sched = scheduler.schedule(cdlt, acg)
+    prog = codegen.generate(sched, acg)
+    ins = random_inputs(cdlt, rng, lo=0, hi=5)
+    res = stream.run_stream(prog, ins)
+    want = cdlt.oracle(ins)
+    for k in want:
+        np.testing.assert_array_equal(res.outputs[k], want[k])
+
+
+@pytest.mark.parametrize("target,build", CASES)
+def test_stream_cycles_agree_with_analytic(target, build, rng):
+    """cost.py is mnemonic-faithful: serial stream cycles match the
+    analytic model (exactly on unclamped tiles, <=2%% on clamped convs)."""
+    acg = targets.get_target(target)
+    sched = scheduler.schedule(build(), acg)
+    prog = codegen.generate(sched, acg)
+    res = stream.run_stream(prog, random_inputs(build(), rng, 0, 3), pack=False)
+    analytic = cost.cost(sched, acg, pack=False).cycles
+    assert abs(res.serial_cycles - analytic) / max(analytic, 1) < 0.02
+
+
+def test_packing_preserves_program_order_dependencies():
+    """No packet may contain two mnemonics with a data hazard, and packets
+    respect original order for dependent pairs."""
+    acg = targets.get_target("hvx")
+    sched = scheduler.schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg)
+    prog = codegen.generate(sched, acg)
+    packets = stream.pack_stream(prog)
+    ms = prog.mnemonics
+    pos = {}
+    for pi, packet in enumerate(packets):
+        for k in packet:
+            pos[k] = pi
+        for a in packet:
+            for b in packet:
+                if a < b:
+                    from repro.core.stream import _conflict
+                    assert not _conflict(ms[a], ms[b]), (a, b)
+    # dependent pairs must stay ordered across packets
+    for i in range(len(ms)):
+        for j in range(i + 1, min(i + 20, len(ms))):
+            from repro.core.stream import _conflict
+            if _conflict(ms[i], ms[j]):
+                assert pos[i] <= pos[j]
+
+
+def test_packing_reduces_cycles_on_vliw():
+    acg = targets.get_target("hvx")
+    sched = scheduler.schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg)
+    prog = codegen.generate(sched, acg)
+    res = stream.run_stream(prog, {
+        "A": np.ones((8, 12), np.uint8), "B": np.ones((12, 16), np.uint8)})
+    assert res.packed_cycles < res.serial_cycles
+    assert res.packing_speedup <= acg.issue_slots
+
+
+def test_packing_noop_on_single_issue():
+    acg = targets.get_target("dnnweaver")  # issue_slots = 1
+    sched = scheduler.schedule(library.gemm(8, 8, 8, in_dtype="u8"), acg)
+    prog = codegen.generate(sched, acg)
+    res = stream.run_stream(prog, {
+        "A": np.ones((8, 8), np.uint8), "B": np.ones((8, 8), np.uint8)})
+    assert res.packed_cycles == res.serial_cycles
+
+
+def test_all_mnemonics_encode(rng):
+    acg = targets.get_target("hvx")
+    sched = scheduler.schedule(library.conv2d(1, 10, 10, 3, 4, 3, 3, 1,
+                                              name="ce"), acg)
+    prog = codegen.generate(sched, acg)
+    for m in prog.mnemonics:
+        w = m.encode()
+        assert 0 <= w < (1 << m.mdef.bits)
+    assert prog.bytes > 0
+
+
+def test_stream_size_guard():
+    acg = targets.get_target("hvx")
+    sched = scheduler.schedule(library.gemm(64, 64, 64, in_dtype="u8"), acg)
+    with pytest.raises(StreamTooLarge):
+        codegen.generate(sched, acg, max_mnemonics=10)
+
+
+def test_xfer_chunks_model():
+    # row wider than edge: split per row
+    n, g, per = xfer_chunks(rows=4, row_bits=1000, coalesce=1, bandwidth=256)
+    assert (n, g, per) == (16, 1, 4)
+    # coalescing bounded by bandwidth
+    n, g, per = xfer_chunks(rows=8, row_bits=64, coalesce=4, bandwidth=256)
+    assert (n, g, per) == (2, 4, 1)
+    # no unroll: one row per op (Fig 8b)
+    n, g, per = xfer_chunks(rows=8, row_bits=64, coalesce=1, bandwidth=256)
+    assert (n, g, per) == (8, 1, 1)
+
+
+def test_loop_overhead_emitted_only_when_configured():
+    hvx = targets.get_target("hvx")       # loop_overhead = 1
+    dnnw = targets.get_target("dnnweaver")  # hardware loops: 0
+    for acg, expect in ((hvx, True), (dnnw, False)):
+        sched = scheduler.schedule(library.gemm(8, 8, 8, in_dtype="u8"), acg)
+        prog = codegen.generate(sched, acg)
+        has_loopi = any(m.mdef.name == "LOOPI" for m in prog.mnemonics)
+        assert has_loopi == expect
+
+
+def test_fig12_optimization_stack_monotone(rng):
+    """vanilla >= +vectorize >= +vectorize+unroll (analytic cycles), and
+    every stage stays functionally correct — the Fig-12 protocol."""
+    acg = targets.get_target("hvx")
+    cdlt = library.gemm(16, 32, 16, in_dtype="u8")
+    ins = random_inputs(cdlt, rng, 0, 4)
+    want = cdlt.oracle(ins)
+    cycles = {}
+    for tag, cfg in [
+        ("vanilla", ScheduleConfig(vectorize=False, unroll=False, pack=False)),
+        ("vec", ScheduleConfig(vectorize=True, unroll=False, pack=False)),
+        ("vec+unroll", ScheduleConfig(vectorize=True, unroll=True, pack=False)),
+    ]:
+        sched = scheduler.schedule(cdlt, acg, cfg)
+        prog = codegen.generate(sched, acg, max_mnemonics=2_000_000)
+        res = stream.run_stream(prog, ins, pack=cfg.pack)
+        np.testing.assert_array_equal(res.outputs["C"], want["C"])
+        cycles[tag] = res.serial_cycles
+    assert cycles["vanilla"] > cycles["vec"]
+    assert cycles["vec"] >= cycles["vec+unroll"]

@@ -1,0 +1,37 @@
+"""Examples must stay runnable (they are the public-API contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, timeout=600, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return subprocess.run([sys.executable, script, *extra],
+                          capture_output=True, text=True, env=env,
+                          cwd=ROOT, timeout=timeout)
+
+
+def test_quickstart_runs():
+    r = _run("examples/quickstart.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "correct=True" in r.stdout
+    assert "=== hvx ===" in r.stdout and "=== dnnweaver ===" in r.stdout
+
+
+def test_train_lm_learns(tmp_path):
+    r = _run("examples/train_lm.py", timeout=900,
+             extra=("--steps", "30", "--ckpt-dir", str(tmp_path)))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss" in r.stdout
+
+
+@pytest.mark.slow
+def test_compile_layers_sweep():
+    r = _run("examples/compile_layers.py", timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "BERT-LG-GEMM1" in r.stdout

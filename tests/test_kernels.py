@@ -1,0 +1,245 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret=True)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.tiling import attention_blocks, gemm_blocks
+
+rng = np.random.default_rng(7)
+
+
+def randn(*s, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(s), dtype)
+
+
+# ---------------------------------------------------------------------------
+# covenant tiler -> BlockSpec bridge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mnk", [(512, 512, 512), (384, 4096, 1024),
+                                 (8192, 8192, 8192), (100, 50, 30)])
+def test_gemm_blocks_are_valid(mnk):
+    m, n, k = mnk
+    bm, bn, bk = gemm_blocks(m, n, k)
+    assert bm >= 1 and bn >= 1 and bk >= 1
+    # VMEM fit for the working set the kernel stages (a, b, acc blocks)
+    bytes_ = (bm * bk + bk * bn) * 2 + bm * bn * 4
+    assert bytes_ <= 128 * 2**20
+    # MXU-friendly unless the problem is smaller than one tile
+    if n >= 128:
+        assert bn % 128 == 0
+    if k >= 128:
+        assert bk % 128 == 0
+
+
+def test_attention_blocks_bounded():
+    bq, bkv = attention_blocks(4096, 4096, 128)
+    assert bq % 8 == 0 and bkv % 128 == 0
+    assert bq * bkv <= 256 * 1024
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (96, 130, 200), (8, 8, 8),
+                                 (33, 17, 9), (256, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_float(mnk, dtype):
+    m, n, k = mnk
+    a = randn(m, k, dtype=dtype)
+    b = randn(k, n, dtype=dtype)
+    got = ops.covenant_matmul(a, b, blocks=(32, 128, 128))
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (40, 50, 60)])
+def test_matmul_int8(mnk):
+    m, n, k = mnk
+    a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+    got = ops.covenant_matmul(a, b, blocks=(32, 128, 128))
+    want = np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_matmul_covenant_default_blocks():
+    a = randn(300, 200)
+    b = randn(200, 150)
+    got = ops.covenant_matmul(a, b)  # tiler-chosen blocks
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    dict(b=2, hq=4, hkv=4, sq=64, sk=64, d=32, causal=True, win=None),
+    dict(b=1, hq=8, hkv=2, sq=100, sk=100, d=16, causal=True, win=None),
+    dict(b=2, hq=4, hkv=2, sq=64, sk=64, d=32, causal=True, win=16),
+    dict(b=1, hq=4, hkv=4, sq=32, sk=96, d=32, causal=True, win=None),
+    dict(b=1, hq=2, hkv=2, sq=48, sk=48, d=16, causal=False, win=None),
+    dict(b=1, hq=4, hkv=1, sq=40, sk=40, d=64, causal=True, win=None),  # MQA
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case):
+    q = randn(case["b"], case["hq"], case["sq"], case["d"])
+    k = randn(case["b"], case["hkv"], case["sk"], case["d"])
+    v = randn(case["b"], case["hkv"], case["sk"], case["d"])
+    got = ops.covenant_attention(q, k, v, causal=case["causal"],
+                                 window=case["win"], blocks=(32, 128))
+    want = ref.attention_ref(q, k, v, causal=case["causal"],
+                             window=case["win"])
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = randn(1, 2, 64, 32, dtype=dtype)
+    k = randn(1, 2, 64, 32, dtype=dtype)
+    v = randn(1, 2, 64, 32, dtype=dtype)
+    got = ops.covenant_attention(q, k, v, blocks=(32, 64))
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_flash_decode_matches_ref():
+    b, hq, hkv, s, d = 3, 8, 2, 256, 32
+    q = randn(b, hq, d)
+    k = randn(b, hkv, s, d)
+    v = randn(b, hkv, s, d)
+    kv_len = jnp.asarray([100, 256, 17])
+    got = ops.covenant_decode_attention(q, k, v, kv_len, block_kv=64)
+    want = ref.attention_ref(q[:, :, None, :], k, v, causal=False,
+                             kv_len=kv_len)[:, :, 0, :]
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+def test_flash_window_equals_dense_when_window_covers_all():
+    q, k, v = randn(1, 2, 64, 16), randn(1, 2, 64, 16), randn(1, 2, 64, 16)
+    wide = ops.covenant_attention(q, k, v, causal=True, window=4096,
+                                  blocks=(32, 64))
+    dense = ops.covenant_attention(q, k, v, causal=True, window=None,
+                                   blocks=(32, 64))
+    np.testing.assert_allclose(wide, dense, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    dict(b=2, s=64, h=4, p=16, g=2, n=8, chunk=16),
+    dict(b=1, s=100, h=4, p=8, g=4, n=16, chunk=32),
+    dict(b=2, s=33, h=2, p=8, g=1, n=4, chunk=16),
+    dict(b=1, s=16, h=2, p=4, g=2, n=4, chunk=16),  # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_matches_sequential_ref(case):
+    b, s, h, p, g, n = (case[k] for k in "bshpgn")
+    x = randn(b, s, h, p)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = randn(b, s, g, n)
+    C = randn(b, s, g, n)
+    got, st = ops.covenant_ssd(x, dt, A, B, C, chunk=case["chunk"],
+                               return_state=True)
+    want, wst = ref.ssd_ref(x, dt, A, B, C, return_state=True)
+    np.testing.assert_allclose(got, want, atol=2e-3)
+    np.testing.assert_allclose(st, wst, atol=2e-3)
+
+
+def test_ssd_init_state_continuation():
+    """Splitting a sequence across two calls == one call (decode contract)."""
+    b, s, h, p, g, n = 1, 64, 2, 8, 2, 8
+    x = randn(b, s, h, p)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B, C = randn(b, s, g, n), randn(b, s, g, n)
+    y_full, st_full = ops.covenant_ssd(x, dt, A, B, C, chunk=16,
+                                       return_state=True)
+    half = s // 2
+    y1, st1 = ops.covenant_ssd(x[:, :half], dt[:, :half], A, B[:, :half],
+                               C[:, :half], chunk=16, return_state=True)
+    y2, st2 = ops.covenant_ssd(x[:, half:], dt[:, half:], A, B[:, half:],
+                               C[:, half:], chunk=16, init_state=st1,
+                               return_state=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, atol=2e-3)
+    np.testing.assert_allclose(st2, st_full, atol=2e-3)
+
+
+def test_ssd_decay_reduces_state_influence():
+    """Sanity: large |A| (fast decay) -> final state smaller in norm."""
+    b, s, h, p, g, n = 1, 32, 2, 4, 2, 4
+    x = randn(b, s, h, p)
+    dt = jnp.full((b, s, h), 0.1, jnp.float32)
+    B, C = randn(b, s, g, n), randn(b, s, g, n)
+    _, st_slow = ops.covenant_ssd(x, dt, jnp.asarray([-0.1, -0.1]), B, C,
+                                  chunk=16, return_state=True)
+    _, st_fast = ops.covenant_ssd(x, dt, jnp.asarray([-8.0, -8.0]), B, C,
+                                  chunk=16, return_state=True)
+    assert float(jnp.linalg.norm(st_fast)) < float(jnp.linalg.norm(st_slow))
+
+
+# ---------------------------------------------------------------------------
+# flash attention backward (Pallas)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,win", [(True, None), (True, 16),
+                                        (False, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_backward_matches_autodiff(causal, win, dtype):
+    from repro.kernels.flash_attention import (flash_attention_bwd,
+                                               flash_attention_fwd_lse)
+    bh, s, d, bq, bkv = 2, 64, 32, 32, 32
+    q = randn(bh, s, d, dtype=dtype)
+    k = randn(bh, s, d, dtype=dtype)
+    v = randn(bh, s, d, dtype=dtype)
+    do = randn(bh, s, d, dtype=dtype)
+    out, lse = flash_attention_fwd_lse(q, k, v, causal=causal, window=win,
+                                       block_q=bq, block_kv=bkv,
+                                       interpret=True)
+    dq, dk, dv = flash_attention_bwd(q, k, v, out, lse, do, causal=causal,
+                                     window=win, block_q=bq, block_kv=bkv,
+                                     interpret=True)
+
+    def loss(q_, k_, v_):
+        o = ref.attention_ref(q_.reshape(1, bh, s, d),
+                              k_.reshape(1, bh, s, d),
+                              v_.reshape(1, bh, s, d),
+                              causal=causal, window=win)
+        return jnp.sum(o.reshape(bh, s, d).astype(jnp.float32)
+                       * do.astype(jnp.float32))
+
+    gd = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    for a, b in zip((dq, dk, dv), gd):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol)
+
+
+def test_flash_fwd_lse_matches_plain_forward():
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_fwd_lse)
+    bh, s, d = 2, 64, 32
+    q, k, v = randn(bh, s, d), randn(bh, s, d), randn(bh, s, d)
+    o1 = flash_attention(q, k, v, block_q=32, block_kv=32, interpret=True)
+    o2, lse = flash_attention_fwd_lse(q, k, v, block_q=32, block_kv=32,
+                                      interpret=True)
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+    assert lse.shape == (bh, s, 1)

@@ -1,0 +1,35 @@
+"""Search-based scheduling (core/search.py): never worse than the
+heuristic, produces functionally correct schedules, and improves at least
+one paper layer."""
+import numpy as np
+import pytest
+
+from repro.core import interp, library, targets
+from repro.core.search import search_schedule
+
+
+@pytest.mark.parametrize("target", ["hvx", "dnnweaver"])
+def test_search_never_worse_and_correct(target, rng):
+    acg = targets.get_target(target)
+    cdlt = library.gemm(24, 32, 16, in_dtype="u8")
+    res = search_schedule(cdlt, acg, generations=4, population=10, seed=1)
+    assert res.best_cycles <= res.heuristic_cycles
+    assert res.evaluated > 5
+    ins = {"A": rng.integers(0, 5, (24, 16)).astype(np.uint8),
+           "B": rng.integers(0, 5, (16, 32)).astype(np.uint8)}
+    got = interp.run(res.best, acg, ins)
+    np.testing.assert_array_equal(got["C"], cdlt.oracle(ins)["C"])
+
+
+def test_search_improves_some_layer():
+    """Across a few Table-2 layers the search beats the greedy heuristic on
+    at least one (the heuristic's tile pick is cost-model-suboptimal
+    somewhere — that gap is exactly what §4 says search should close)."""
+    acg = targets.get_target("hvx")
+    gains = []
+    for spec in library.PAPER_LAYERS[6:10]:  # DLRM FC stack (fast)
+        res = search_schedule(spec.build(), acg, generations=5,
+                              population=12, seed=0)
+        gains.append(res.gain)
+    assert max(gains) > 1.0
+    assert all(g >= 1.0 - 1e-9 for g in gains)
