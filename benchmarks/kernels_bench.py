@@ -1,7 +1,8 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time +
-Covenant-tiler BlockSpec report.  On CPU the absolute times are meaningless
-for TPU perf; the interesting outputs are the tiler-chosen block geometries
-and the (always asserted) numerical agreement."""
+Covenant-tiler BlockSpec report + compile-driver cache behaviour.  On CPU
+the absolute times are meaningless for TPU perf; the interesting outputs are
+the tiler-chosen block geometries, the (always asserted) numerical
+agreement, and the cold-vs-cached ``repro.compile`` latencies."""
 from __future__ import annotations
 
 import time
@@ -10,8 +11,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
+from repro.core import library as covenant_library
 from repro.kernels import ops, ref
 from repro.kernels.tiling import attention_blocks, gemm_blocks
+
+
+def _driver_section(emit) -> None:
+    """Covenant compile driver: per-target analytic cycles for a mid-size
+    GEMM plus the content-addressed cache hit latency."""
+    repro.clear_cache()
+    for target in ("hvx", "dnnweaver"):
+        t0 = time.perf_counter()
+        art = repro.compile(covenant_library.gemm(64, 64, 64, in_dtype="u8"),
+                            target)
+        cold = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        again = repro.compile(covenant_library.gemm(64, 64, 64, in_dtype="u8"),
+                              target)
+        warm = (time.perf_counter() - t0) * 1e6
+        assert again is art  # served from the cache, no pass re-ran
+        emit(f"kernels/driver_compile_{target},{cold:.0f},"
+             f"cycles={art.cycles():.0f} cached_us={warm:.0f}")
 
 
 def _time(fn, *a, reps=3):
@@ -25,6 +46,7 @@ def _time(fn, *a, reps=3):
 
 def run(emit):
     rng = np.random.default_rng(0)
+    _driver_section(emit)
     # tiler block selections for the paper-relevant GEMMs (Table-2 dims)
     for (m, n, k) in [(384, 4096, 1024), (384, 1024, 4096), (512, 512, 512),
                       (8192, 8192, 8192)]:

@@ -20,31 +20,31 @@ import math
 import statistics
 import time
 
-from repro.core import cost, library, scheduler, targets
-from repro.core.scheduler import ScheduleConfig
+import repro
+from repro.core import library
 
 CONFIGS = {
-    "vanilla": ScheduleConfig(vectorize=False, unroll=False, pack=False),
-    "+vec": ScheduleConfig(vectorize=True, unroll=False, pack=False),
-    "+vec+pack": ScheduleConfig(vectorize=True, unroll=False, pack=True),
-    "+vec+pack+unroll": ScheduleConfig(vectorize=True, unroll=True,
-                                       pack=True),
+    "vanilla": repro.CompileOptions(vectorize=False, unroll=False, pack=False),
+    "+vec": repro.CompileOptions(vectorize=True, unroll=False, pack=False),
+    "+vec+pack": repro.CompileOptions(vectorize=True, unroll=False, pack=True),
+    "+vec+pack+unroll": repro.CompileOptions(vectorize=True, unroll=True,
+                                             pack=True),
 }
 
 
-def layer_cycles(spec, acg, cfg: ScheduleConfig) -> float:
-    sched = scheduler.schedule(spec.build(), acg, cfg)
-    return cost.cost(sched, acg, pack=cfg.pack).cycles
+def layer_cycles(spec, target, cfg: repro.CompileOptions) -> float:
+    """Analytic cycles via the compile driver; repeated (layer, target,
+    config) points across fig11/fig12/fig13 are served from the cache."""
+    return repro.compile(spec, target, cfg).cycles()
 
 
 def fig11(emit) -> dict:
     """Covenant (optimized) vs unoptimized scalar baseline on HVX."""
-    acg = targets.get_target("hvx")
     speedups = {}
     for spec in library.PAPER_LAYERS:
         t0 = time.perf_counter()
-        base = layer_cycles(spec, acg, CONFIGS["vanilla"])
-        opt = layer_cycles(spec, acg, CONFIGS["+vec+pack+unroll"])
+        base = layer_cycles(spec, "hvx", CONFIGS["vanilla"])
+        opt = layer_cycles(spec, "hvx", CONFIGS["+vec+pack+unroll"])
         us = (time.perf_counter() - t0) * 1e6
         speedups[spec.key] = base / opt
         emit(f"fig11/{spec.key},{us:.0f},speedup={base / opt:.1f}")
@@ -55,13 +55,12 @@ def fig11(emit) -> dict:
 
 def fig12(emit) -> dict:
     """Optimization stacking on HVX (the Fig-12 ablation)."""
-    acg = targets.get_target("hvx")
     stages = list(CONFIGS)
     table: dict[str, dict] = {}
     for spec in library.PAPER_LAYERS:
         cycles = {}
         for stage in stages:
-            cycles[stage] = layer_cycles(spec, acg, CONFIGS[stage])
+            cycles[stage] = layer_cycles(spec, "hvx", CONFIGS[stage])
         table[spec.key] = cycles
     # marginal factors, geometric mean across layers
     factors = {}
@@ -80,6 +79,7 @@ def fig12_search(emit) -> dict:
     """Beyond-paper: §4's enabled search loop vs the one-shot heuristic.
     Evolutionary search over Algorithm-1-valid tilings x unroll factors,
     scored by the analytic model (core/search.py)."""
+    from repro.core import targets
     from repro.core.search import search_schedule
 
     acg = targets.get_target("hvx")
@@ -98,13 +98,11 @@ def fig12_search(emit) -> dict:
 
 def fig13(emit) -> dict:
     """HVX vs DNNWeaver, both fully optimized (Fig-13 protocol)."""
-    hvx = targets.get_target("hvx")
-    dnnw = targets.get_target("dnnweaver")
     cfg = CONFIGS["+vec+pack+unroll"]
     ratios = {}
     for spec in library.PAPER_LAYERS:
-        ch = layer_cycles(spec, hvx, cfg)
-        cd = layer_cycles(spec, dnnw, cfg)
+        ch = layer_cycles(spec, "hvx", cfg)
+        cd = layer_cycles(spec, "dnnweaver", cfg)
         ratios[spec.key] = ch / cd
         emit(f"fig13/{spec.key},0,hvx/dnnweaver={ch / cd:.1f}")
     gmean = math.exp(statistics.mean(

@@ -1,26 +1,29 @@
-"""Table-2 sweep: compile all 17 paper layers for both targets and print
-the per-layer cycle summary (the data behind Figs 11/13).
+"""Table-2 sweep: batch-compile all 17 paper layers for both targets with
+``repro.compile_many`` and print the per-layer cycle summary (the data
+behind Figs 11/13).  Artifacts are cached content-addressed, so re-running
+a sweep (or overlapping one, e.g. the Fig-12 ablation) re-uses compiles.
 
     PYTHONPATH=src python examples/compile_layers.py
 """
-from repro.core import cost, library, scheduler, targets
-from repro.core.scheduler import ScheduleConfig
+import repro
+from repro.core import library
 
-OPT = ScheduleConfig(vectorize=True, unroll=True, pack=True)
-BASE = ScheduleConfig(vectorize=False, unroll=False, pack=False)
+OPT = repro.CompileOptions(vectorize=True, unroll=True, pack=True)
+BASE = repro.CompileOptions(vectorize=False, unroll=False, pack=False)
 
 
 def main() -> None:
-    hvx = targets.get_target("hvx")
-    dnnw = targets.get_target("dnnweaver")
+    base_arts = repro.compile_many(library.PAPER_LAYERS, target="hvx",
+                                   options=BASE)
+    opt_arts = repro.compile_many(library.PAPER_LAYERS, target="hvx",
+                                  options=OPT)
+    dnnw_arts = repro.compile_many(library.PAPER_LAYERS, target="dnnweaver",
+                                   options=OPT)
     print(f"{'layer':22s} {'base(HVX)':>12s} {'opt(HVX)':>12s} "
           f"{'speedup':>8s} {'opt(DNNW)':>12s}")
-    for spec in library.PAPER_LAYERS:
-        base = cost.cost(scheduler.schedule(spec.build(), hvx, BASE), hvx,
-                         pack=False).cycles
-        opt = cost.cost(scheduler.schedule(spec.build(), hvx, OPT), hvx).cycles
-        dn = cost.cost(scheduler.schedule(spec.build(), dnnw, OPT),
-                       dnnw).cycles
+    for spec, b, o, d in zip(library.PAPER_LAYERS, base_arts, opt_arts,
+                             dnnw_arts):
+        base, opt, dn = b.cycles(), o.cycles(), d.cycles()
         print(f"{spec.key:22s} {base:12.0f} {opt:12.0f} {base / opt:8.1f} "
               f"{dn:12.0f}")
 

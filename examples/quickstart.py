@@ -1,16 +1,19 @@
-"""Quickstart: the paper's pipeline end-to-end on two targets.
+"""Quickstart: the paper's pipeline end-to-end on two targets, via the
+unified compile driver.
 
-Defines an ``add`` Codelet (Fig 7), schedules it with the Covenant compiler
-against the HVX and DNNWeaver ACGs (placement -> compute mapping ->
-Algorithm-1 tiling -> transfer insertion -> optimization passes), generates
-macro-mnemonic streams, executes them on the stream machine, and checks
-the result against numpy.
+One ``repro.compile(codelet, target)`` call runs the whole Covenant flow
+(placement -> compute mapping -> Algorithm-1 tiling -> transfer insertion ->
+optimization passes) and returns a cached ``CompiledArtifact``; the
+macro-mnemonic program, stream execution and analytic cycle count hang off
+the artifact.  Retargeting is the ``target=`` argument — nothing else
+changes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import codegen, cost, library, scheduler, stream, targets
+import repro
+from repro.core import library
 
 
 def main() -> None:
@@ -21,22 +24,26 @@ def main() -> None:
     want = (A.astype(np.int64) @ B.astype(np.int64)).astype(np.int32)
 
     for target in ("hvx", "dnnweaver"):
-        acg = targets.get_target(target)
-        sched = scheduler.schedule(cdlt, acg)
+        art = repro.compile(cdlt, target)
         print(f"=== {target} ===")
-        for note in sched.schedule_notes:
+        for note in art.schedule_notes:
             print("  ", note)
-        prog = codegen.generate(sched, acg)
+        prog = art.program
         print(f"   {len(prog)} mnemonics ({prog.bytes} bytes); first 5:")
-        for line in prog.listing(5).splitlines():
+        for line in art.listing(5).splitlines():
             print("    ", line)
-        res = stream.run_stream(prog, {"A": A, "B": B})
+        res = art.run({"A": A, "B": B})
         ok = np.array_equal(res.outputs["C"], want)
-        rep = cost.cost(sched, acg)
         print(f"   correct={ok} serial={res.serial_cycles:.0f}cyc "
               f"packed={res.packed_cycles:.0f}cyc "
-              f"(analytic {rep.cycles:.0f})")
+              f"(analytic {art.cycles():.0f})")
         assert ok
+        # a repeated compile of the same (codelet, target, options) is served
+        # from the content-addressed cache: the very same artifact comes back
+        assert repro.compile(cdlt, target) is art
+
+    stats = repro.cache_stats()
+    print(f"compile cache: {stats['hits']} hits / {stats['misses']} misses")
 
 
 if __name__ == "__main__":

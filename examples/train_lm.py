@@ -10,7 +10,7 @@ import jax
 
 from repro import configs
 from repro.data import SyntheticLM
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import get_model
 from repro.optim import adamw, cosine_schedule
 from repro.runtime import make_train_step, train_loop
@@ -33,7 +33,7 @@ def main() -> None:
     print(f"[train_lm] {total / 1e6:.1f}M params")
 
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init_params(jax.random.PRNGKey(0))
         opt = adamw(cosine_schedule(1e-3, 30, args.steps))
         opt_state = opt.init(params)

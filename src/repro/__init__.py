@@ -1,0 +1,27 @@
+"""repro — reproduction of "Restoring the Broken Covenant Between Compilers
+and Deep Learning Accelerators".
+
+Top-level API (the unified compile driver):
+
+    import repro
+    from repro.core import library
+
+    art = repro.compile(library.gemm(16, 32, 24), target="hvx")
+    art.run(inputs)        # execute the macro-mnemonic stream
+    art.cycles()           # mnemonic-faithful analytic cycles
+    art.listing()          # mnemonic program listing
+
+Heavier subsystems (``repro.kernels``, ``repro.models``, ``repro.launch``,
+...) depend on jax and are imported on demand — importing ``repro`` itself
+only pulls in the numpy-based Covenant core.
+"""
+from repro.core.driver import (CompiledArtifact, available_targets,
+                               cache_stats, clear_cache, compile,
+                               compile_many, register_target)
+from repro.core.pipeline import CompileOptions, Pipeline
+
+__all__ = [
+    "CompileOptions", "CompiledArtifact", "Pipeline", "available_targets",
+    "cache_stats", "clear_cache", "compile", "compile_many",
+    "register_target",
+]

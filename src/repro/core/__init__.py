@@ -1,23 +1,32 @@
 """Covenant compiler core — the paper's contribution.
 
-Pipeline: ``library`` Codelets -> ``scheduler.schedule`` (placement, compute
-mapping, Algorithm-1 tiling, transfer insertion) -> ``passes`` optimizations
-(vectorize / unroll / pack) -> ``codegen.generate`` macro-mnemonic expansion
--> ``stream.run_stream`` execution, with ``interp`` (functional) and ``cost``
-(analytic cycles) as cross-checks.  ``targets`` holds the predefined ACGs.
+Pipeline: ``library`` Codelets -> named pass pipeline (``pipeline``:
+placement, compute mapping, Algorithm-1 tiling, transfer insertion,
+vectorize / unroll / pack, macro-mnemonic ``codegen``) -> ``stream``
+execution, with ``interp`` (functional) and ``cost`` (analytic cycles) as
+cross-checks.  ``targets`` holds the predefined ACGs; ``driver`` is the
+user-facing ``repro.compile()`` entry point with the content-addressed
+compile cache.  ``scheduler.schedule`` / ``codegen.generate`` remain as thin
+stable wrappers over the pipeline stages.
 """
-from . import (acg, codegen, codelet, cost, dtypes, interp, library, passes,
-               scheduler, semantics, stream, targets)
+from . import (acg, codegen, codelet, cost, driver, dtypes, interp, library,
+               passes, pipeline, scheduler, semantics, stream, targets)
 from .acg import ACG, Capability, ComputeNode, Edge, MemoryNode, cap, ospec
 from .codelet import Codelet, Compute, Loop, Ref, Surrogate, Transfer, ref, v
+from .driver import (CompiledArtifact, available_targets, cache_stats,
+                     clear_cache, compile, compile_many, register_target)
 from .dtypes import Dtype, dt
+from .pipeline import CompileOptions, PassContext, Pipeline
 from .scheduler import ScheduleConfig, schedule
 from .targets import get_target
 
 __all__ = [
-    "ACG", "Capability", "Codelet", "Compute", "ComputeNode", "Dtype",
-    "Edge", "Loop", "MemoryNode", "Ref", "ScheduleConfig", "Surrogate",
-    "Transfer", "acg", "cap", "codegen", "codelet", "cost", "dt", "dtypes",
-    "get_target", "interp", "library", "ospec", "passes", "ref", "schedule",
-    "scheduler", "semantics", "stream", "targets", "v",
+    "ACG", "Capability", "Codelet", "CompileOptions", "CompiledArtifact",
+    "Compute", "ComputeNode", "Dtype", "Edge", "Loop", "MemoryNode",
+    "PassContext", "Pipeline", "Ref", "ScheduleConfig", "Surrogate",
+    "Transfer", "acg", "available_targets", "cache_stats", "cap",
+    "clear_cache", "codegen", "codelet", "compile", "compile_many", "cost",
+    "driver", "dt", "dtypes", "get_target", "interp", "library", "ospec",
+    "passes", "pipeline", "ref", "register_target", "schedule", "scheduler",
+    "semantics", "stream", "targets", "v",
 ]

@@ -284,6 +284,12 @@ class ACG:
         # must be staged in (inputs..., output).  Optional realism hint for
         # targets with dedicated per-operand buffers (DNNWeaver IBUF/WBUF/...).
         self.operand_ports: dict[tuple[str, str], tuple[str, ...]] = {}
+        # BYOC-style pass hooks consumed by pipeline.Pipeline.with_acg_hooks:
+        # ``pass_overrides`` replaces a named stage's body for this target;
+        # ``extra_passes`` splices ("after:STAGE"|"before:STAGE", name, fn)
+        # stages into the stock pipeline.  Empty on the stock targets.
+        self.pass_overrides: dict[str, object] = {}
+        self.extra_passes: list[tuple[str, str, object]] = []
         self._g = nx.DiGraph()
 
     # -- construction -------------------------------------------------------

@@ -1,0 +1,297 @@
+"""``repro.compile`` — the one-call Covenant compile driver.
+
+Everything the examples, benchmarks and tests used to hand-stitch
+(``library.* -> scheduler.schedule -> codegen.generate -> stream.run_stream
+-> cost.cost``, each with its own loose knobs) behind a single entry point:
+
+    art = repro.compile(library.gemm(16, 32, 24), target="hvx")
+    art.run({"A": A, "B": B})     # execute the mnemonic stream
+    art.cycles()                  # analytic cycle count
+    art.listing(5)                # mnemonic listing
+    art.verify({"A": A, "B": B})  # stream outputs == numpy oracle
+
+Design points:
+
+* **Target registry** — ``target`` is a name from ``targets.TARGETS`` (extend
+  with ``register_target``) or an ACG instance; per-ACG pass hooks
+  (``acg.pass_overrides`` / ``acg.extra_passes``) are applied to the stock
+  pipeline automatically, so bringing your own codegen is attribute-plus-hook
+  work, never a compiler fork.
+* **Content-addressed cache** — artifacts are keyed by (codelet fingerprint,
+  ACG fingerprint, options fingerprint, pipeline fingerprint); a repeated
+  ``compile`` of the same inputs returns the *same artifact object* without
+  re-running any pass.  ``compile_many`` batches sweeps over the cache.
+* **Lazy analytics** — scheduling runs eagerly (it is what a compile *is*),
+  but mnemonic expansion (``codegen``) is deferred until ``.program`` /
+  ``.run()`` / ``.listing()`` is first touched: Table-2-scale layers exceed
+  the full-unroll stream budget and are served by the analytic model alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from . import cost as cost_mod
+from . import library as library_mod
+from . import stream as stream_mod
+from . import targets as targets_mod
+from .acg import ACG
+from .codelet import Codelet
+from .pipeline import CompileOptions, PassContext, Pipeline
+
+# ---------------------------------------------------------------------------
+# fingerprints (content addressing)
+# ---------------------------------------------------------------------------
+
+
+def _sha(*parts: str) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(p.encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+def codelet_fingerprint(cdlt: Codelet) -> str:
+    """Content hash of a codelet: name, body (loops/refs), surrogate
+    shapes+dtypes, and param values (which the pretty-printer omits)."""
+    params = ",".join(f"{s.name}={s.value}" for s in cdlt.surrogates.values()
+                      if s.kind == "param")
+    return _sha(cdlt.name, str(cdlt), params)
+
+
+def acg_fingerprint(acg: ACG) -> str:
+    """Content hash of a target: structure, knobs, ports and vocabulary."""
+    ports = repr(sorted(acg.operand_ports.items()))
+    mnems = ",".join(sorted(acg.mnemonics))
+    return _sha(acg.describe(), str(acg.issue_slots), str(acg.loop_overhead),
+                ports, mnems)
+
+
+# ---------------------------------------------------------------------------
+# compiled artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class CompiledArtifact:
+    """A finished compile: scheduled codelet + lazy program and analytics."""
+
+    codelet: Codelet            # the scheduled (transformed) codelet
+    acg: ACG
+    options: CompileOptions
+    target: str                 # target name (acg.name for ACG instances)
+    key: str                    # content-addressed cache key
+    pipeline: Pipeline
+    ctx: PassContext            # pass state (plans, tiling, pack, program)
+
+    # -- program (lazy mnemonic expansion) -----------------------------------
+    @property
+    def program(self):
+        """The macro-mnemonic stream; generated on first access.  Raises
+        ``codegen.StreamTooLarge`` for layers past ``options.max_mnemonics``
+        (use the analytic ``.cycles()`` / ``.report()`` for those)."""
+        if "program" not in self.ctx.state:
+            self.pipeline.run_stage("codegen", self.ctx)
+        return self.ctx.state["program"]
+
+    @property
+    def mnemonics(self) -> list:
+        return self.program.mnemonics
+
+    def listing(self, limit: int = 50) -> str:
+        return self.program.listing(limit)
+
+    # -- execution -----------------------------------------------------------
+    def _default_pack(self) -> bool:
+        # the pipeline's "pack" stage records the decision (a target override
+        # may have changed it); fall back to the raw option if it never ran
+        return self.ctx.state.get("pack", self.options.pack)
+
+    def run(self, inputs: dict, pack: bool | None = None):
+        """Execute the mnemonic stream on the stream machine; returns a
+        ``stream.StreamResult`` (outputs + serial/packed cycle counts)."""
+        if pack is None:
+            pack = self._default_pack()
+        return stream_mod.run_stream(self.program, inputs, pack=pack)
+
+    def verify(self, oracle_inputs: dict, atol: float = 1e-5) -> bool:
+        """Stream-machine outputs equal the codelet's numpy oracle?"""
+        assert self.codelet.oracle is not None, \
+            f"codelet {self.codelet.name} carries no oracle"
+        want = self.codelet.oracle(oracle_inputs)
+        got = self.run(oracle_inputs).outputs
+        for k, w in want.items():
+            g = got[k]
+            if np.issubdtype(np.asarray(w).dtype, np.floating):
+                if not np.allclose(g, w, atol=atol):
+                    return False
+            elif not np.array_equal(g, w):
+                return False
+        return True
+
+    # -- analytics (no stream needed) ----------------------------------------
+    def report(self, pack: bool | None = None) -> "cost_mod.CostReport":
+        if pack is None:
+            pack = self._default_pack()
+        cached = self.ctx.state.get(("report", pack))
+        if cached is None:
+            cached = cost_mod.cost(self.codelet, self.acg, pack=pack)
+            self.ctx.state[("report", pack)] = cached
+        return cached
+
+    def cycles(self, pack: bool | None = None) -> float:
+        return self.report(pack=pack).cycles
+
+    @property
+    def schedule_notes(self) -> list[str]:
+        return self.codelet.schedule_notes
+
+    def __repr__(self) -> str:
+        return (f"CompiledArtifact({self.codelet.name} @ {self.target}, "
+                f"stages={self.ctx.executed}, key={self.key[:12]})")
+
+
+# ---------------------------------------------------------------------------
+# target registry
+# ---------------------------------------------------------------------------
+
+
+def register_target(name: str, factory, *, pass_overrides: dict | None = None,
+                    extra_passes: Sequence[tuple] | None = None) -> None:
+    """Register an ACG factory under ``name`` (usable as ``compile(...,
+    target=name)``).  Optional hooks are attached to every instance the
+    factory produces — the BYOC extension point."""
+    if pass_overrides or extra_passes:
+        base = factory
+
+        def factory():
+            acg = base()
+            acg.pass_overrides.update(pass_overrides or {})
+            for entry in extra_passes or ():
+                # idempotent even when the user's factory returns a shared
+                # ACG instance: never splice the same pass twice
+                if entry not in acg.extra_passes:
+                    acg.extra_passes.append(entry)
+            return acg
+
+    targets_mod.TARGETS[name] = factory
+    _TARGETS_RESOLVED.pop(name, None)
+
+
+def available_targets() -> list[str]:
+    return sorted(targets_mod.TARGETS)
+
+
+# name -> (factory, acg, fingerprint): building a full ACG (graph + mnemonic
+# vocabulary) and hashing its description costs ~0.5ms — pointless on every
+# cache hit of a sweep.  The factory identity is stored so that direct
+# mutation of targets.TARGETS (the registry's public idiom) invalidates the
+# entry; ACG structure is immutable post-construction by convention (pass
+# *hooks* are fingerprinted separately, via the pipeline).
+_TARGETS_RESOLVED: dict[str, tuple[object, ACG, str]] = {}
+
+
+def _resolve_target(target) -> tuple[ACG, str]:
+    """-> (acg, acg_fingerprint)."""
+    if isinstance(target, ACG):
+        return target, acg_fingerprint(target)
+    if isinstance(target, str):
+        factory = targets_mod.TARGETS.get(target)
+        cached = _TARGETS_RESOLVED.get(target)
+        if cached is None or cached[0] is not factory:
+            acg = targets_mod.get_target(target)  # KeyError for unknown
+            cached = (factory, acg, acg_fingerprint(acg))
+            _TARGETS_RESOLVED[target] = cached
+        return cached[1], cached[2]
+    raise TypeError(f"target must be a name or an ACG, got {type(target)!r}")
+
+
+def _resolve_codelet(obj) -> Codelet:
+    if isinstance(obj, Codelet):
+        return obj
+    if isinstance(obj, library_mod.LayerSpec):
+        return obj.build()
+    if isinstance(obj, str):
+        return library_mod.paper_layer(obj)
+    if callable(obj):  # layer builder thunk
+        built = obj()
+        if isinstance(built, Codelet):
+            return built
+    raise TypeError(
+        f"expected a Codelet, LayerSpec, paper-layer key or builder; "
+        f"got {type(obj)!r}")
+
+
+# ---------------------------------------------------------------------------
+# the compile cache
+# ---------------------------------------------------------------------------
+
+# In-process and unbounded: right for sweeps and tests, where the working
+# set is the benchmark suite itself.  Long-running serving processes will
+# want the disk-backed, size-bounded store tracked in ROADMAP "Open items"
+# (same content-addressed keys); until then, repro.clear_cache() is the
+# pressure valve.
+_CACHE: dict[str, CompiledArtifact] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+def cache_stats() -> dict:
+    return dict(_STATS, size=len(_CACHE))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def compile(codelet_or_layer, target="hvx",
+            options: CompileOptions | None = None, *,
+            pipeline: Pipeline | None = None,
+            cache: bool = True) -> CompiledArtifact:
+    """Compile a codelet (or paper-layer key / LayerSpec / builder) for a
+    target, returning a cached ``CompiledArtifact``.
+
+    ``pipeline`` overrides the stock pass pipeline entirely; otherwise the
+    default pipeline plus the target's ACG hooks is used.
+    """
+    cdlt = _resolve_codelet(codelet_or_layer)
+    acg, acg_fp = _resolve_target(target)
+    opts = options if options is not None else CompileOptions()
+    pl = pipeline if pipeline is not None \
+        else Pipeline.default().with_acg_hooks(acg)
+    key = _sha(codelet_fingerprint(cdlt), acg_fp,
+               opts.fingerprint(), pl.fingerprint())
+    if cache and key in _CACHE:
+        _STATS["hits"] += 1
+        return _CACHE[key]
+    _STATS["misses"] += 1
+    ctx = PassContext(cdlt.clone(), acg, opts)
+    pl.run(ctx, skip=("codegen",))  # codegen deferred to .program
+    art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
+                           target=acg.name, key=key, pipeline=pl, ctx=ctx)
+    if cache:
+        _CACHE[key] = art
+    return art
+
+
+def compile_many(items: Iterable, target="hvx",
+                 options: CompileOptions | None = None,
+                 **kwargs) -> list[CompiledArtifact]:
+    """Batch compile: one artifact per item, in order, sharing the cache.
+    ``items`` may mix Codelets, LayerSpecs, paper-layer keys and builders."""
+    return [compile(item, target, options, **kwargs) for item in items]
+
+
+__all__ = ["CompileOptions", "CompiledArtifact", "acg_fingerprint",
+           "available_targets", "cache_stats", "clear_cache",
+           "codelet_fingerprint", "compile", "compile_many",
+           "register_target"]

@@ -423,35 +423,28 @@ def insert_transfers(cdlt: Codelet, acg: ACG, plans: list[OperandPlan]) -> None:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class ScheduleConfig:
-    vectorize: bool = True
-    unroll: bool = True
-    pack: bool = True
-    unroll_factor: int = 4
+def schedule(cdlt: Codelet, acg: ACG, config=None) -> Codelet:
+    """Thin stable wrapper over the named pass pipeline (``pipeline.py``):
+    runs every stage but ``codegen`` on a clone and returns it.  ``config``
+    is a ``CompileOptions`` (the old ``ScheduleConfig``, kept as an alias).
+    """
+    from .pipeline import CompileOptions, PassContext, Pipeline
+
+    config = config or CompileOptions()
+    ctx = PassContext(cdlt.clone(), acg, config)
+    Pipeline.default().with_acg_hooks(acg).run(ctx, skip=("codegen",))
+    ctx.cdlt.note(f"schedule: done (vectorize={config.vectorize}, "
+                  f"unroll={config.unroll}, pack={config.pack})")
+    return ctx.cdlt
 
 
-def schedule(cdlt: Codelet, acg: ACG, config: ScheduleConfig | None = None) -> Codelet:
-    """Run the full pipeline (stages 1-5 + optimization passes) on a copy."""
-    from . import passes  # local import to avoid a cycle
-
-    config = config or ScheduleConfig()
-    c = cdlt.clone()
-    place_operands(c, acg)
-    map_compute(c, acg, vectorize=config.vectorize)
-    plans = plan_operands(c, acg)
-    tiling = choose_tiling(c, acg, plans, estimate_tiling_cost)
-    split_loops(c, tiling)
-    plans = plan_operands(c, acg)  # refs were rewritten; re-plan
-    insert_transfers(c, acg, plans)
-    passes.granularize(c, acg)  # align strides with the mapped capability
-    if config.vectorize:
-        passes.vectorize(c, acg)
-    if config.unroll:
-        passes.unroll(c, acg, config.unroll_factor)
-    c.note(f"schedule: done (vectorize={config.vectorize}, "
-           f"unroll={config.unroll}, pack={config.pack})")
-    return c
+def __getattr__(name: str):
+    # ScheduleConfig was unified into pipeline.CompileOptions; keep the old
+    # import path (``from repro.core.scheduler import ScheduleConfig``) alive.
+    if name == "ScheduleConfig":
+        from .pipeline import CompileOptions
+        return CompileOptions
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = ["OperandPlan", "ScheduleConfig", "capability_candidates",

@@ -1,0 +1,11 @@
+"""Version-compat shims for jax.experimental.pallas on TPU.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; kernels
+import the name from here so the tolerance lives in one place.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

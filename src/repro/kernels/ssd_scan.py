@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
                       y_ref, state_ref, dsum_ref):
@@ -94,7 +96,7 @@ def ssd_chunk_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             jax.ShapeDtypeStruct((bh * nck, n, p), jnp.float32),
             jax.ShapeDtypeStruct((bh * nck, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, dt2, B, C, A.astype(jnp.float32))

@@ -25,4 +25,15 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
-__all__ = ["make_host_mesh", "make_production_mesh"]
+def use_mesh(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    (new), ``jax.sharding.use_mesh`` (mid), or the ``Mesh`` object itself
+    (0.4.x, where Mesh is a context manager)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+__all__ = ["make_host_mesh", "make_production_mesh", "use_mesh"]

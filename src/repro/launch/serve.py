@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               use_mesh)
 from repro.models import get_model
 
 
@@ -37,7 +38,7 @@ def main() -> None:
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
     rng = np.random.default_rng(args.seed)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init_params(jax.random.PRNGKey(args.seed))
         decode = jax.jit(model.decode_step, donate_argnums=(2,))
 

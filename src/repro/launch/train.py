@@ -15,7 +15,8 @@ import numpy as np
 
 from repro import configs
 from repro.data import SyntheticLM
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               use_mesh)
 from repro.models import get_model
 from repro.models.common import configure_activation_sharding
 from repro.optim import adamw, cosine_schedule, int8_compressed
@@ -51,7 +52,7 @@ def main() -> None:
     if args.compress_grads:
         opt = int8_compressed(opt)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init_params(jax.random.PRNGKey(args.seed))
         opt_state = opt.init(params)
         p_sh = shard_rules.shardings(params, mesh)

@@ -32,6 +32,19 @@ def pdt(cfg: ArchConfig):
 _ACT_AXES: dict = {"batch": None, "seq": None, "heads": None, "vocab": None}
 
 
+def current_mesh():
+    """The ambient mesh, across jax versions: ``jax.sharding
+    .get_abstract_mesh`` (new) or the thread-resources physical mesh set by
+    ``with mesh:`` (0.4.x).  Returns None when no mesh is active."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        return None if m is None or getattr(m, "empty", False) else m
+    from jax._src import mesh as _mesh
+    pm = _mesh.thread_resources.env.physical_mesh
+    return None if pm.empty else pm
+
+
 def configure_activation_sharding(batch_axes=None, seq_axes=None,
                                   heads_axes=None, vocab_axes=None) -> None:
     """E.g. batch_axes=("pod","data"), seq_axes="model", heads_axes="model".
@@ -59,11 +72,14 @@ def shard_act(x: jax.Array, logical: tuple) -> jax.Array:
         ax = _ACT_AXES.get(l) if isinstance(l, str) else None
         if ax is not None:
             import numpy as _np
-            mesh = jax.sharding.get_abstract_mesh()
-            size = int(_np.prod([mesh.shape[a] for a in
-                                 ((ax,) if isinstance(ax, str) else ax)]))
-            if x.shape[d] % size != 0 or x.shape[d] < size:
+            mesh = current_mesh()
+            if mesh is None:
                 ax = None
+            else:
+                size = int(_np.prod([mesh.shape[a] for a in
+                                     ((ax,) if isinstance(ax, str) else ax)]))
+                if x.shape[d] % size != 0 or x.shape[d] < size:
+                    ax = None
         spec.append(ax)
     return jax.lax.with_sharding_constraint(x, P(*spec))
 

@@ -287,7 +287,8 @@ def _cache_write_token(cache_k, k_new, length):
     seq_ax = _ACT_AXES.get("seq")
     if not seq_ax:
         return _scatter_write(cache_k, k_new, pos)
-    mesh = jax.sharding.get_abstract_mesh()
+    from .common import current_mesh
+    mesh = current_mesh()
     if mesh is None or seq_ax not in getattr(mesh, "shape", {}):
         return _scatter_write(cache_k, k_new, pos)
     n = mesh.shape[seq_ax]

@@ -1,11 +1,13 @@
 """Code generation + stream machine: functional equivalence, cycle
-agreement with the analytic model, packing legality."""
+agreement with the analytic model, packing legality.  End-to-end cases go
+through the unified driver (repro.compile); unit-level model tests keep
+using the thin codegen wrappers directly."""
 import numpy as np
 import pytest
 
-from repro.core import codegen, cost, library, scheduler, stream, targets
+import repro
+from repro.core import codegen, library, scheduler, stream, targets
 from repro.core.codegen import StreamTooLarge, xfer_chunks
-from repro.core.scheduler import ScheduleConfig
 
 from conftest import random_inputs
 
@@ -24,35 +26,31 @@ CASES = [
 
 @pytest.mark.parametrize("target,build", CASES)
 def test_stream_matches_oracle(target, build, rng):
-    acg = targets.get_target(target)
     cdlt = build()
-    sched = scheduler.schedule(cdlt, acg)
-    prog = codegen.generate(sched, acg)
+    art = repro.compile(cdlt, target)
     ins = random_inputs(cdlt, rng, lo=0, hi=5)
-    res = stream.run_stream(prog, ins)
+    res = art.run(ins)
     want = cdlt.oracle(ins)
     for k in want:
         np.testing.assert_array_equal(res.outputs[k], want[k])
+    assert art.verify(ins)
 
 
 @pytest.mark.parametrize("target,build", CASES)
 def test_stream_cycles_agree_with_analytic(target, build, rng):
     """cost.py is mnemonic-faithful: serial stream cycles match the
     analytic model (exactly on unclamped tiles, <=2%% on clamped convs)."""
-    acg = targets.get_target(target)
-    sched = scheduler.schedule(build(), acg)
-    prog = codegen.generate(sched, acg)
-    res = stream.run_stream(prog, random_inputs(build(), rng, 0, 3), pack=False)
-    analytic = cost.cost(sched, acg, pack=False).cycles
+    art = repro.compile(build(), target)
+    res = art.run(random_inputs(build(), rng, 0, 3), pack=False)
+    analytic = art.cycles(pack=False)
     assert abs(res.serial_cycles - analytic) / max(analytic, 1) < 0.02
 
 
 def test_packing_preserves_program_order_dependencies():
     """No packet may contain two mnemonics with a data hazard, and packets
     respect original order for dependent pairs."""
-    acg = targets.get_target("hvx")
-    sched = scheduler.schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg)
-    prog = codegen.generate(sched, acg)
+    prog = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"),
+                         "hvx").program
     packets = stream.pack_stream(prog)
     ms = prog.mnemonics
     pos = {}
@@ -73,40 +71,41 @@ def test_packing_preserves_program_order_dependencies():
 
 
 def test_packing_reduces_cycles_on_vliw():
-    acg = targets.get_target("hvx")
-    sched = scheduler.schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg)
-    prog = codegen.generate(sched, acg)
-    res = stream.run_stream(prog, {
+    art = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx")
+    res = art.run({
         "A": np.ones((8, 12), np.uint8), "B": np.ones((12, 16), np.uint8)})
     assert res.packed_cycles < res.serial_cycles
-    assert res.packing_speedup <= acg.issue_slots
+    assert res.packing_speedup <= art.acg.issue_slots
 
 
 def test_packing_noop_on_single_issue():
-    acg = targets.get_target("dnnweaver")  # issue_slots = 1
-    sched = scheduler.schedule(library.gemm(8, 8, 8, in_dtype="u8"), acg)
-    prog = codegen.generate(sched, acg)
-    res = stream.run_stream(prog, {
+    art = repro.compile(library.gemm(8, 8, 8, in_dtype="u8"),
+                        "dnnweaver")  # issue_slots = 1
+    res = art.run({
         "A": np.ones((8, 8), np.uint8), "B": np.ones((8, 8), np.uint8)})
     assert res.packed_cycles == res.serial_cycles
 
 
 def test_all_mnemonics_encode(rng):
-    acg = targets.get_target("hvx")
-    sched = scheduler.schedule(library.conv2d(1, 10, 10, 3, 4, 3, 3, 1,
-                                              name="ce"), acg)
-    prog = codegen.generate(sched, acg)
-    for m in prog.mnemonics:
+    art = repro.compile(library.conv2d(1, 10, 10, 3, 4, 3, 3, 1, name="ce"),
+                        "hvx")
+    for m in art.program.mnemonics:
         w = m.encode()
         assert 0 <= w < (1 << m.mdef.bits)
-    assert prog.bytes > 0
+    assert art.program.bytes > 0
 
 
 def test_stream_size_guard():
+    # via the legacy wrapper...
     acg = targets.get_target("hvx")
     sched = scheduler.schedule(library.gemm(64, 64, 64, in_dtype="u8"), acg)
     with pytest.raises(StreamTooLarge):
         codegen.generate(sched, acg, max_mnemonics=10)
+    # ...and via the unified options (lazy codegen fires on .program)
+    art = repro.compile(library.gemm(64, 64, 64, in_dtype="u8"), "hvx",
+                        repro.CompileOptions(max_mnemonics=10), cache=False)
+    with pytest.raises(StreamTooLarge):
+        art.program
 
 
 def test_xfer_chunks_model():
@@ -122,11 +121,10 @@ def test_xfer_chunks_model():
 
 
 def test_loop_overhead_emitted_only_when_configured():
-    hvx = targets.get_target("hvx")       # loop_overhead = 1
-    dnnw = targets.get_target("dnnweaver")  # hardware loops: 0
-    for acg, expect in ((hvx, True), (dnnw, False)):
-        sched = scheduler.schedule(library.gemm(8, 8, 8, in_dtype="u8"), acg)
-        prog = codegen.generate(sched, acg)
+    # hvx: loop_overhead = 1; dnnweaver: hardware loops, 0
+    for target, expect in (("hvx", True), ("dnnweaver", False)):
+        prog = repro.compile(library.gemm(8, 8, 8, in_dtype="u8"),
+                             target).program
         has_loopi = any(m.mdef.name == "LOOPI" for m in prog.mnemonics)
         assert has_loopi == expect
 
@@ -134,19 +132,21 @@ def test_loop_overhead_emitted_only_when_configured():
 def test_fig12_optimization_stack_monotone(rng):
     """vanilla >= +vectorize >= +vectorize+unroll (analytic cycles), and
     every stage stays functionally correct — the Fig-12 protocol."""
-    acg = targets.get_target("hvx")
     cdlt = library.gemm(16, 32, 16, in_dtype="u8")
     ins = random_inputs(cdlt, rng, 0, 4)
     want = cdlt.oracle(ins)
     cycles = {}
-    for tag, cfg in [
-        ("vanilla", ScheduleConfig(vectorize=False, unroll=False, pack=False)),
-        ("vec", ScheduleConfig(vectorize=True, unroll=False, pack=False)),
-        ("vec+unroll", ScheduleConfig(vectorize=True, unroll=True, pack=False)),
+    big = 2_000_000
+    for tag, opts in [
+        ("vanilla", repro.CompileOptions(vectorize=False, unroll=False,
+                                         pack=False, max_mnemonics=big)),
+        ("vec", repro.CompileOptions(vectorize=True, unroll=False,
+                                     pack=False, max_mnemonics=big)),
+        ("vec+unroll", repro.CompileOptions(vectorize=True, unroll=True,
+                                            pack=False, max_mnemonics=big)),
     ]:
-        sched = scheduler.schedule(cdlt, acg, cfg)
-        prog = codegen.generate(sched, acg, max_mnemonics=2_000_000)
-        res = stream.run_stream(prog, ins, pack=cfg.pack)
+        art = repro.compile(cdlt, "hvx", opts)
+        res = art.run(ins)
         np.testing.assert_array_equal(res.outputs["C"], want["C"])
         cycles[tag] = res.serial_cycles
     assert cycles["vanilla"] > cycles["vec"]

@@ -1,0 +1,199 @@
+"""The unified compile driver (repro.compile): equivalence with the legacy
+manual call chain, content-addressed caching, the pluggable pass pipeline,
+and the per-ACG pass-override hook."""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import codegen, cost, library, scheduler, stream, targets
+from repro.core.codegen import StreamTooLarge
+from repro.core.pipeline import Pipeline
+
+from conftest import random_inputs
+
+CASES = [
+    ("hvx", lambda: library.gemm(8, 16, 12, in_dtype="u8")),
+    ("hvx", lambda: library.elementwise("ADD", 64, "i32")),
+    ("dnnweaver", lambda: library.gemm(8, 16, 12, in_dtype="u8")),
+    ("dnnweaver", lambda: library.elementwise("ADD", 64, "i32")),
+]
+
+
+# ---------------------------------------------------------------------------
+# (a) equivalence with the legacy manual pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target,build", CASES)
+def test_compile_matches_legacy_chain(target, build, rng):
+    """repro.compile() produces byte-identical mnemonic programs, equal
+    analytic cycles, and equal stream outputs to the hand-stitched
+    schedule -> generate -> run_stream -> cost chain."""
+    cdlt = build()
+    acg = targets.get_target(target)
+    sched = scheduler.schedule(cdlt, acg)
+    prog = codegen.generate(sched, acg)
+    ins = random_inputs(cdlt, rng, 0, 5)
+    legacy = stream.run_stream(prog, ins)
+    legacy_cycles = cost.cost(sched, acg).cycles
+
+    art = repro.compile(build(), target)
+    assert [m.encode() for m in art.program.mnemonics] == \
+        [m.encode() for m in prog.mnemonics]
+    assert [str(m) for m in art.program.mnemonics] == \
+        [str(m) for m in prog.mnemonics]
+    assert art.cycles() == legacy_cycles
+    res = art.run(ins)
+    for k in legacy.outputs:
+        np.testing.assert_array_equal(res.outputs[k], legacy.outputs[k])
+    assert res.serial_cycles == legacy.serial_cycles
+    assert art.verify(ins)
+
+
+def test_layer_key_and_spec_resolution():
+    """Paper-layer keys and LayerSpecs resolve to the same artifact as the
+    built codelet (content addressing, not object identity)."""
+    spec = library.PAPER_LAYERS[6]  # DLRM-FC1: small
+    by_key = repro.compile(spec.key, "hvx")
+    by_spec = repro.compile(spec, "hvx")
+    by_cdlt = repro.compile(spec.build(), "hvx")
+    assert by_key is by_spec is by_cdlt
+
+
+# ---------------------------------------------------------------------------
+# (b) content-addressed cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_returns_same_artifact_without_rerunning():
+    repro.clear_cache()
+    a1 = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx")
+    stages_run = list(a1.ctx.executed)
+    a2 = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx")
+    assert a2 is a1                       # same artifact object
+    assert a1.ctx.executed == stages_run  # no pass re-ran
+    stats = repro.cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+
+def test_cache_misses_on_any_key_component():
+    repro.clear_cache()
+    base = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx")
+    other_target = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"),
+                                 "dnnweaver")
+    other_opts = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx",
+                               repro.CompileOptions(unroll=False))
+    other_cdlt = repro.compile(library.gemm(8, 16, 13, in_dtype="u8"), "hvx")
+    arts = {id(a) for a in (base, other_target, other_opts, other_cdlt)}
+    assert len(arts) == 4
+    assert repro.cache_stats()["misses"] == 4
+
+
+def test_cache_bypass():
+    repro.clear_cache()
+    a1 = repro.compile(library.gemm(4, 8, 4, in_dtype="u8"), "hvx",
+                       cache=False)
+    a2 = repro.compile(library.gemm(4, 8, 4, in_dtype="u8"), "hvx",
+                       cache=False)
+    assert a1 is not a2
+    assert repro.cache_stats()["size"] == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) pluggable pipeline + per-ACG override hook
+# ---------------------------------------------------------------------------
+
+
+def test_acg_pass_hooks_execute():
+    """A stage override and an extra pass installed on the ACG (BYOC-style)
+    both actually run, in pipeline position."""
+    acg = targets.get_target("hvx")
+    ran = []
+
+    def spy(ctx):
+        ran.append("spy")
+        ctx.cdlt.note("custom-pass: executed")
+
+    def no_unroll(ctx):
+        ran.append("unroll-override")
+
+    acg.extra_passes.append(("after:granularize", "spy", spy))
+    acg.pass_overrides["unroll"] = no_unroll
+    art = repro.compile(library.gemm(4, 8, 4, in_dtype="u8"), acg,
+                        cache=False)
+    assert ran == ["spy", "unroll-override"]
+    assert any("custom-pass: executed" in n for n in art.schedule_notes)
+    assert "spy" in art.pipeline.names
+    # the override suppressed unrolling: no unroll note on the codelet
+    assert not any(n.startswith("unroll:") for n in art.schedule_notes)
+
+
+def test_explicit_pipeline_argument():
+    marks = []
+    pl = Pipeline.default().insert_before(
+        "codegen", "mark", lambda ctx: marks.append(ctx.cdlt.name))
+    art = repro.compile(library.elementwise("MUL", 32, "i32"), "hvx",
+                        pipeline=pl, cache=False)
+    assert marks == [art.codelet.name]
+
+
+def test_schedule_wrapper_runs_acg_hooks():
+    """The thin scheduler.schedule wrapper also honours ACG hooks."""
+    acg = targets.get_target("dnnweaver")
+    acg.extra_passes.append(
+        ("before:place", "tag", lambda ctx: ctx.cdlt.note("tag: hello")))
+    sched = scheduler.schedule(library.gemm(4, 8, 4, in_dtype="u8"), acg)
+    assert sched.schedule_notes[0] == "tag: hello"
+
+
+# ---------------------------------------------------------------------------
+# options unification + misc artifact surface
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_config_is_compile_options():
+    assert scheduler.ScheduleConfig is repro.CompileOptions
+    assert hash(repro.CompileOptions()) == hash(repro.CompileOptions())
+
+
+def test_max_mnemonics_option_travels_to_codegen():
+    art = repro.compile(library.gemm(64, 64, 64, in_dtype="u8"), "hvx",
+                        repro.CompileOptions(max_mnemonics=10), cache=False)
+    with pytest.raises(StreamTooLarge):
+        art.program  # codegen is lazy; the guard fires on first touch
+
+
+def test_large_layer_analytics_without_program():
+    """Table-2-scale layers are served by analytic cycles alone — compiling
+    must not eagerly expand the (too large) mnemonic stream."""
+    art = repro.compile("BERT-LG-GEMM1", "hvx")
+    assert art.cycles() > 0
+    assert "program" not in art.ctx.state
+
+
+def test_compile_many_batches_and_caches():
+    repro.clear_cache()
+    items = [library.gemm(4, 8, 4, in_dtype="u8"),
+             library.elementwise("ADD", 16, "i32"),
+             "DLRM-FC4"]
+    arts = repro.compile_many(items, target="dnnweaver")
+    assert len(arts) == 3
+    again = repro.compile_many(items, target="dnnweaver")
+    assert all(a is b for a, b in zip(arts, again))
+
+
+def test_register_target():
+    repro.register_target("hvx_nounroll", targets.hvx_acg,
+                          pass_overrides={"unroll": lambda ctx: None})
+    try:
+        assert "hvx_nounroll" in repro.available_targets()
+        art = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"),
+                            "hvx_nounroll", cache=False)
+        assert not any(n.startswith("unroll:") for n in art.schedule_notes)
+        # same mnemonics as an explicit unroll=False compile on stock hvx
+        ref = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx",
+                            repro.CompileOptions(unroll=False), cache=False)
+        assert [m.encode() for m in art.program.mnemonics] == \
+            [m.encode() for m in ref.program.mnemonics]
+    finally:
+        targets.TARGETS.pop("hvx_nounroll", None)

@@ -3,6 +3,9 @@ GEMM/elementwise problems must schedule, generate, execute and agree with
 the numpy oracle on every target — the paper's retargetability claim as an
 invariant."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # container may lack it; gate, don't fail
 from hypothesis import given, settings, strategies as st
 
 from repro.core import codegen, interp, library, scheduler, stream, targets

@@ -4,6 +4,7 @@ one paper layer."""
 import numpy as np
 import pytest
 
+import repro
 from repro.core import interp, library, targets
 from repro.core.search import search_schedule
 
@@ -14,6 +15,8 @@ def test_search_never_worse_and_correct(target, rng):
     cdlt = library.gemm(24, 32, 16, in_dtype="u8")
     res = search_schedule(cdlt, acg, generations=4, population=10, seed=1)
     assert res.best_cycles <= res.heuristic_cycles
+    # the search's heuristic baseline is exactly the driver's schedule
+    assert res.heuristic_cycles == repro.compile(cdlt, target).cycles()
     assert res.evaluated > 5
     ins = {"A": rng.integers(0, 5, (24, 16)).astype(np.uint8),
            "B": rng.integers(0, 5, (16, 32)).astype(np.uint8)}
