@@ -2,10 +2,15 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only fig11,...]``
 Prints ``name,us_per_call,derived`` CSV lines.
+
+With ``REPRO_CACHE_DIR`` set, every compile goes through the disk artifact
+store; ``--expect-store-hits`` makes a warm re-run *assert* it recompiled
+nothing (exit 1 on any store miss) — the CI warm-sweep check.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
@@ -14,6 +19,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of {fig11,fig12,fig13,roofline,kernels}")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--expect-store-hits", action="store_true",
+                    help="fail unless every compile was a disk-store hit "
+                         "(requires REPRO_CACHE_DIR and a prior warm run)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -41,6 +49,19 @@ def main() -> None:
         from benchmarks.roofline_table import table
         table(emit, args.dryrun_dir)
     emit(f"benchmarks/total_wall,{(time.time() - t0) * 1e6:.0f},done")
+
+    import repro
+    stats = repro.cache_stats()
+    emit(f"benchmarks/store,0,hits={stats['store_hits']} "
+         f"misses={stats['store_misses']}")
+    if args.expect_store_hits:
+        if stats["store_misses"] or not stats["store_hits"]:
+            print(f"FAIL: expected an all-hit warm store sweep, got "
+                  f"{stats['store_hits']} hits / "
+                  f"{stats['store_misses']} misses", file=sys.stderr)
+            sys.exit(1)
+        emit(f"benchmarks/store_warm,0,all {stats['store_hits']} "
+             f"compiles served from the artifact store")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,12 @@
 """Batched serving example: continuous-batching decode loop against a
 smoke-size gemma3 (sliding-window KV caches exercised).
 
+Layer compilation is migrated onto the unified driver: the serving stack
+compiles the model's decode-shape GEMMs with ``repro.compile`` (see
+``repro/launch/layers.py``) and prints the accelerator cycle report before
+serving.  Set ``REPRO_CACHE_DIR`` to replay those compiles from the disk
+artifact store on relaunch.
+
     PYTHONPATH=src python examples/serve_lm.py
 """
 import subprocess
@@ -9,4 +15,5 @@ import sys
 if __name__ == "__main__":
     sys.exit(subprocess.call(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-12b",
-         "--smoke", "--requests", "8", "--batch", "4", "--max-new", "16"]))
+         "--smoke", "--requests", "8", "--batch", "4", "--max-new", "16",
+         "--accel-target", "hvx"]))

@@ -2,6 +2,11 @@
 synthetic LM stream for a few hundred steps with the full production
 stack (sharded step, checkpoints, fault tolerance).
 
+Layer compilation runs through the unified driver first: the step's GEMMs
+are compiled with ``repro.compile`` (``repro/launch/layers.py``) and the
+accelerator cycle report printed; with ``REPRO_CACHE_DIR`` set, relaunches
+replay the compiles from the disk artifact store.
+
     PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
@@ -10,6 +15,7 @@ import jax
 
 from repro import configs
 from repro.data import SyntheticLM
+from repro.launch.layers import layer_report
 from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.models import get_model
 from repro.optim import adamw, cosine_schedule
@@ -20,6 +26,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    ap.add_argument("--accel-target", default="hvx")
     args = ap.parse_args()
 
     # ~100M params: qwen3 family, scaled width/depth
@@ -31,6 +38,9 @@ def main() -> None:
     from repro.roofline import param_count
     total, _ = param_count(cfg)
     print(f"[train_lm] {total / 1e6:.1f}M params")
+    # per-GEMM accelerator cycles at the training token count (8 x 256),
+    # compiled through the driver's pipeline/cache/store seam
+    print(layer_report(cfg, tokens=8 * 256, target=args.accel_target))
 
     mesh = make_host_mesh()
     with use_mesh(mesh):

@@ -15,13 +15,14 @@ Heavier subsystems (``repro.kernels``, ``repro.models``, ``repro.launch``,
 ...) depend on jax and are imported on demand — importing ``repro`` itself
 only pulls in the numpy-based Covenant core.
 """
-from repro.core.driver import (CompiledArtifact, available_targets,
-                               cache_stats, clear_cache, compile,
-                               compile_many, register_target)
+from repro.core.driver import (ArtifactStore, CompiledArtifact,
+                               SearchOptions, SearchResult,
+                               available_targets, cache_stats, clear_cache,
+                               compile, compile_many, register_target)
 from repro.core.pipeline import CompileOptions, Pipeline
 
 __all__ = [
-    "CompileOptions", "CompiledArtifact", "Pipeline", "available_targets",
-    "cache_stats", "clear_cache", "compile", "compile_many",
-    "register_target",
+    "ArtifactStore", "CompileOptions", "CompiledArtifact", "Pipeline",
+    "SearchOptions", "SearchResult", "available_targets", "cache_stats",
+    "clear_cache", "compile", "compile_many", "register_target",
 ]

@@ -6,11 +6,14 @@ vectorize / unroll / pack, macro-mnemonic ``codegen``) -> ``stream``
 execution, with ``interp`` (functional) and ``cost`` (analytic cycles) as
 cross-checks.  ``targets`` holds the predefined ACGs; ``driver`` is the
 user-facing ``repro.compile()`` entry point with the content-addressed
-compile cache.  ``scheduler.schedule`` / ``codegen.generate`` remain as thin
-stable wrappers over the pipeline stages.
+compile cache, schedule ``search`` (a strategy registry materialising
+candidates through the pipeline) and the disk-backed ``store``.
+``scheduler.schedule`` / ``codegen.generate`` remain as thin stable
+wrappers over the pipeline stages.
 """
 from . import (acg, codegen, codelet, cost, driver, dtypes, interp, library,
-               passes, pipeline, scheduler, semantics, stream, targets)
+               passes, pipeline, scheduler, search, semantics, store, stream,
+               targets)
 from .acg import ACG, Capability, ComputeNode, Edge, MemoryNode, cap, ospec
 from .codelet import Codelet, Compute, Loop, Ref, Surrogate, Transfer, ref, v
 from .driver import (CompiledArtifact, available_targets, cache_stats,
@@ -18,15 +21,18 @@ from .driver import (CompiledArtifact, available_targets, cache_stats,
 from .dtypes import Dtype, dt
 from .pipeline import CompileOptions, PassContext, Pipeline
 from .scheduler import ScheduleConfig, schedule
+from .search import SearchOptions, SearchResult
+from .store import ArtifactStore
 from .targets import get_target
 
 __all__ = [
-    "ACG", "Capability", "Codelet", "CompileOptions", "CompiledArtifact",
-    "Compute", "ComputeNode", "Dtype", "Edge", "Loop", "MemoryNode",
-    "PassContext", "Pipeline", "Ref", "ScheduleConfig", "Surrogate",
-    "Transfer", "acg", "available_targets", "cache_stats", "cap",
-    "clear_cache", "codegen", "codelet", "compile", "compile_many", "cost",
-    "driver", "dt", "dtypes", "get_target", "interp", "library", "ospec",
-    "passes", "pipeline", "ref", "register_target", "schedule", "scheduler",
-    "semantics", "stream", "targets", "v",
+    "ACG", "ArtifactStore", "Capability", "Codelet", "CompileOptions",
+    "CompiledArtifact", "Compute", "ComputeNode", "Dtype", "Edge", "Loop",
+    "MemoryNode", "PassContext", "Pipeline", "Ref", "ScheduleConfig",
+    "SearchOptions", "SearchResult", "Surrogate", "Transfer", "acg",
+    "available_targets", "cache_stats", "cap", "clear_cache", "codegen",
+    "codelet", "compile", "compile_many", "cost", "driver", "dt", "dtypes",
+    "get_target", "interp", "library", "ospec", "passes", "pipeline", "ref",
+    "register_target", "schedule", "scheduler", "search", "semantics",
+    "store", "stream", "targets", "v",
 ]

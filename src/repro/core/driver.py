@@ -36,11 +36,14 @@ import numpy as np
 
 from . import cost as cost_mod
 from . import library as library_mod
+from . import store as store_mod
 from . import stream as stream_mod
 from . import targets as targets_mod
 from .acg import ACG
 from .codelet import Codelet
 from .pipeline import CompileOptions, PassContext, Pipeline
+from .search import SearchOptions, SearchResult, search_schedule
+from .store import ArtifactStore
 
 # ---------------------------------------------------------------------------
 # fingerprints (content addressing)
@@ -78,7 +81,15 @@ def acg_fingerprint(acg: ACG) -> str:
 
 @dataclasses.dataclass(eq=False)
 class CompiledArtifact:
-    """A finished compile: scheduled codelet + lazy program and analytics."""
+    """A finished compile: scheduled codelet + lazy program and analytics.
+
+    An artifact restored from a disk ``ArtifactStore`` starts with *no*
+    pipeline stage executed: its cost reports and schedule decisions come
+    from the stored entry, and the scheduled codelet is rebuilt lazily
+    (``_ensure_scheduled``) by replaying the pipeline with the stored
+    tiling/unroll injected — only when ``.program`` / ``.run()`` or an
+    unstored analytic is actually touched.
+    """
 
     codelet: Codelet            # the scheduled (transformed) codelet
     acg: ACG
@@ -87,6 +98,15 @@ class CompiledArtifact:
     key: str                    # content-addressed cache key
     pipeline: Pipeline
     ctx: PassContext            # pass state (plans, tiling, pack, program)
+    search: SearchResult | None = None   # attached when compiled via search
+
+    # -- lazy schedule replay (store restores) -------------------------------
+    def _ensure_scheduled(self) -> None:
+        """Replay the scheduling stages if none ran yet (artifact was
+        restored from the disk store; ``ctx.overrides`` carries the stored
+        schedule decisions, so no tiling search/enumeration re-runs)."""
+        if not self.ctx.executed:
+            self.pipeline.run(self.ctx, skip=("codegen",))
 
     # -- program (lazy mnemonic expansion) -----------------------------------
     @property
@@ -95,6 +115,7 @@ class CompiledArtifact:
         ``codegen.StreamTooLarge`` for layers past ``options.max_mnemonics``
         (use the analytic ``.cycles()`` / ``.report()`` for those)."""
         if "program" not in self.ctx.state:
+            self._ensure_scheduled()
             self.pipeline.run_stage("codegen", self.ctx)
         return self.ctx.state["program"]
 
@@ -139,6 +160,7 @@ class CompiledArtifact:
             pack = self._default_pack()
         cached = self.ctx.state.get(("report", pack))
         if cached is None:
+            self._ensure_scheduled()
             cached = cost_mod.cost(self.codelet, self.acg, pack=pack)
             self.ctx.state[("report", pack)] = cached
         return cached
@@ -148,6 +170,12 @@ class CompiledArtifact:
 
     @property
     def schedule_notes(self) -> list[str]:
+        # store-restored artifacts report the original compile's notes,
+        # stable across the lazy replay (the replayed codelet's own notes
+        # stay reachable via ``art.codelet.schedule_notes``)
+        stored = self.ctx.state.get("schedule_notes")
+        if stored is not None:
+            return list(stored)
         return self.codelet.schedule_notes
 
     def __repr__(self) -> str:
@@ -230,22 +258,58 @@ def _resolve_codelet(obj) -> Codelet:
 # the compile cache
 # ---------------------------------------------------------------------------
 
-# In-process and unbounded: right for sweeps and tests, where the working
-# set is the benchmark suite itself.  Long-running serving processes will
-# want the disk-backed, size-bounded store tracked in ROADMAP "Open items"
-# (same content-addressed keys); until then, repro.clear_cache() is the
-# pressure valve.
+# Two tiers share the content-addressed keys: the in-process dict below
+# (unbounded — the working set is the sweep itself) and, when configured,
+# a disk-backed size-bounded ``ArtifactStore`` (``CompileOptions(store=...)``
+# or the REPRO_CACHE_DIR environment variable) that lets a *fresh process*
+# replay sweeps and tuned schedules without re-running scheduling or search.
 _CACHE: dict[str, CompiledArtifact] = {}
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "store_hits": 0, "store_misses": 0}
 
 
-def clear_cache() -> None:
+def clear_cache(disk: bool = False, store=None) -> None:
+    """Empty the in-process cache; ``disk=True`` also empties the disk
+    store (``store`` argument, else the REPRO_CACHE_DIR default)."""
     _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    for k in _STATS:
+        _STATS[k] = 0
+    if disk:
+        st = store_mod.resolve(store)
+        if st is not None:
+            st.clear()
 
 
 def cache_stats() -> dict:
     return dict(_STATS, size=len(_CACHE))
+
+
+def _restore_from_store(entry: dict, cdlt: Codelet, acg: ACG,
+                        opts: CompileOptions, pl: Pipeline,
+                        key: str) -> CompiledArtifact:
+    """Rebuild an artifact from a stored entry with ZERO pass executions:
+    analytics come from the stored reports, the schedule decisions become
+    ``ctx.overrides`` so any later ``.program`` touch replays them."""
+    ctx = PassContext(cdlt.clone(), acg, opts)
+    if entry.get("tiling") is not None:
+        ctx.overrides["tiling"] = {str(k): int(v)
+                                   for k, v in entry["tiling"].items()}
+    ctx.overrides["unroll_factor"] = int(
+        entry.get("unroll_factor", opts.unroll_factor))
+    ctx.state["pack"] = bool(entry["pack"])
+    ctx.state["schedule_notes"] = [str(n) for n in entry.get("notes", ())]
+    for pack, rep in store_mod.reports_from_entry(entry).items():
+        ctx.state[("report", pack)] = rep
+    art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
+                           target=acg.name, key=key, pipeline=pl, ctx=ctx)
+    s = entry.get("search")
+    if s:
+        art.search = SearchResult(
+            best=ctx.cdlt, best_cycles=float(s["best_cycles"]),
+            heuristic_cycles=float(s["heuristic_cycles"]),
+            evaluated=int(s["evaluated"]),
+            trace=[tuple(t) for t in s.get("trace", [])],
+            strategy=s.get("strategy", "evolutionary"), point=s.get("point"))
+    return art
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +326,12 @@ def compile(codelet_or_layer, target="hvx",
 
     ``pipeline`` overrides the stock pass pipeline entirely; otherwise the
     default pipeline plus the target's ACG hooks is used.
+
+    ``options.search`` routes the compile through schedule search (the
+    winner — never worse than the heuristic — is the artifact, with the
+    ``SearchResult`` trace attached as ``art.search``).  ``options.store``
+    or ``REPRO_CACHE_DIR`` adds a disk tier: warm hits restore without
+    executing any pipeline stage; ``cache=False`` bypasses both tiers.
     """
     cdlt = _resolve_codelet(codelet_or_layer)
     acg, acg_fp = _resolve_target(target)
@@ -270,16 +340,54 @@ def compile(codelet_or_layer, target="hvx",
         else Pipeline.default().with_acg_hooks(acg)
     key = _sha(codelet_fingerprint(cdlt), acg_fp,
                opts.fingerprint(), pl.fingerprint())
+    store = store_mod.resolve(opts.store) if cache else None
     if cache and key in _CACHE:
         _STATS["hits"] += 1
-        return _CACHE[key]
+        art = _CACHE[key]
+        if store is not None and key not in store:
+            # the key was compiled before this store was configured —
+            # backfill so a fresh process still replays it warm
+            try:
+                store.put(key, store_mod.entry_from_artifact(art))
+            except Exception:
+                pass  # persistence is opportunistic, never fatal
+        return art
     _STATS["misses"] += 1
-    ctx = PassContext(cdlt.clone(), acg, opts)
-    pl.run(ctx, skip=("codegen",))  # codegen deferred to .program
-    art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
-                           target=acg.name, key=key, pipeline=pl, ctx=ctx)
+    if store is not None:
+        entry = store.load(key)
+        if entry is not None:
+            try:
+                art = _restore_from_store(entry, cdlt, acg, opts, pl, key)
+            except Exception:
+                # entry parsed but is unusable (schema drift): drop it and
+                # recompile cleanly below
+                store.invalidate(key)
+                art = None
+            if art is not None:
+                _STATS["store_hits"] += 1
+                _CACHE[key] = art
+                return art
+        _STATS["store_misses"] += 1
+    if opts.search is not None:
+        res = search_schedule(cdlt, acg, options=opts, pipeline=pl)
+        ctx = res.best_ctx
+        art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
+                               target=acg.name, key=key, pipeline=pl,
+                               ctx=ctx, search=res)
+    else:
+        ctx = PassContext(cdlt.clone(), acg, opts)
+        pl.run(ctx, skip=("codegen",))  # codegen deferred to .program
+        art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
+                               target=acg.name, key=key, pipeline=pl,
+                               ctx=ctx)
     if cache:
         _CACHE[key] = art
+    if store is not None:
+        try:
+            store.put(key, store_mod.entry_from_artifact(art))
+        except Exception:
+            pass  # a full/read-only/unserialisable store entry must never
+            #       fail an otherwise-successful compile
     return art
 
 
@@ -291,7 +399,8 @@ def compile_many(items: Iterable, target="hvx",
     return [compile(item, target, options, **kwargs) for item in items]
 
 
-__all__ = ["CompileOptions", "CompiledArtifact", "acg_fingerprint",
+__all__ = ["ArtifactStore", "CompileOptions", "CompiledArtifact",
+           "SearchOptions", "SearchResult", "acg_fingerprint",
            "available_targets", "cache_stats", "clear_cache",
            "codelet_fingerprint", "compile", "compile_many",
            "register_target"]

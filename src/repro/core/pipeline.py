@@ -45,6 +45,13 @@ class CompileOptions:
     ``vectorize`` / ``unroll`` / ``pack`` / ``unroll_factor`` are the old
     ``ScheduleConfig`` fields (Fig-12 optimization toggles); ``max_mnemonics``
     is the stream-size guard that used to be a ``codegen.generate`` kwarg.
+
+    ``search`` (a ``repro.core.search.SearchOptions``) routes the compile
+    through schedule search instead of the one-shot heuristic — the searched
+    winner is cached under the same content-addressed key scheme (the search
+    options are part of the key).  ``store`` names a disk-backed
+    ``ArtifactStore`` (instance or directory path); it is a *location*, not a
+    compile input, so it does not contribute to the fingerprint.
     """
 
     vectorize: bool = True
@@ -52,9 +59,16 @@ class CompileOptions:
     pack: bool = True
     unroll_factor: int = 4
     max_mnemonics: int = 300_000
+    search: object | None = None   # SearchOptions; None = one-shot heuristic
+    store: object | None = None    # ArtifactStore | path; not fingerprinted
 
     def fingerprint(self) -> str:
-        return repr(dataclasses.astuple(self))
+        base = repr((self.vectorize, self.unroll, self.pack,
+                     self.unroll_factor, self.max_mnemonics))
+        if self.search is not None:
+            fp = getattr(self.search, "fingerprint", None)
+            base += ";search=" + (fp() if fp else repr(self.search))
+        return base
 
 
 @dataclasses.dataclass
@@ -64,6 +78,12 @@ class PassContext:
     ``cdlt`` is transformed in place (it is always a clone of the caller's
     codelet); ``state`` carries inter-stage products (``plans``, ``tiling``,
     ``pack``, ``program``); ``executed`` logs stage names for introspection.
+
+    ``overrides`` injects a *schedule point* as data: ``{"tiling": {var:
+    factor}, "unroll_factor": n}`` makes the ``tile`` stage adopt the given
+    tiling instead of running Algorithm-1 selection and the ``unroll`` stage
+    use the given factor.  This is how schedule search materialises
+    candidates and how the artifact store replays a stored schedule.
     """
 
     cdlt: Codelet
@@ -71,6 +91,7 @@ class PassContext:
     options: CompileOptions
     state: dict = dataclasses.field(default_factory=dict)
     executed: list = dataclasses.field(default_factory=list)
+    overrides: dict = dataclasses.field(default_factory=dict)
 
 
 StageFn = Callable[[PassContext], None]
@@ -108,8 +129,16 @@ def tile_stage(ctx: PassContext) -> None:
     from .scheduler import choose_tiling, estimate_tiling_cost, plan_operands
     plans = plan_operands(ctx.cdlt, ctx.acg)
     ctx.state["plans"] = plans
-    ctx.state["tiling"] = choose_tiling(ctx.cdlt, ctx.acg, plans,
-                                        estimate_tiling_cost)
+    override = ctx.overrides.get("tiling")
+    if override is not None:
+        # the schedule point is data: adopt the injected tiling verbatim
+        # (search candidates come pre-validated by Algorithm 1; store
+        # replays record a tiling that was valid when first compiled)
+        ctx.state["tiling"] = dict(override)
+        ctx.cdlt.note(f"tile: injected tiling={dict(override)}")
+    else:
+        ctx.state["tiling"] = choose_tiling(ctx.cdlt, ctx.acg, plans,
+                                            estimate_tiling_cost)
 
 
 @register_stage("split")
@@ -145,8 +174,11 @@ def vectorize_stage(ctx: PassContext) -> None:
 def unroll_stage(ctx: PassContext) -> None:
     if not ctx.options.unroll:
         return
+    factor = ctx.overrides.get("unroll_factor", ctx.options.unroll_factor)
+    if factor <= 1:
+        return
     from .passes import unroll
-    unroll(ctx.cdlt, ctx.acg, ctx.options.unroll_factor)
+    unroll(ctx.cdlt, ctx.acg, factor)
 
 
 @register_stage("pack")
@@ -178,8 +210,18 @@ SCHEDULE_STAGES: tuple[str, ...] = DEFAULT_STAGE_ORDER[:-1]
 # ---------------------------------------------------------------------------
 
 
-class PipelineError(KeyError):
-    pass
+def _capture_tag(value) -> str:
+    """Identity contribution of one captured closure value / defaults
+    tuple.  ``repr`` is used when it is faithful; a repr that raises or
+    elides content (numpy's ``...`` truncation) falls back to object id —
+    process-local, so distinct values never alias (the safe direction)."""
+    try:
+        r = repr(value)
+    except Exception:
+        return f"@{id(value):x}"
+    if "..." in r:
+        return f"@{id(value):x}"
+    return r
 
 
 class Pipeline:
@@ -272,16 +314,38 @@ class Pipeline:
 
     def fingerprint(self) -> str:
         """Cache-key contribution.  Stock stages are identified by name;
-        custom functions by qualname+id (so a customised pipeline never
-        aliases the stock one — callers mutating closures should pass
-        ``cache=False`` to ``repro.compile``)."""
+        custom functions by qualname + a hash of their source *plus* their
+        default args and captured closure values, which is stable across
+        processes — required for the disk artifact store to give
+        BYOC/custom-target compiles warm hits — while two closures from
+        the same factory with different captured parameters still get
+        distinct keys.  Captures whose ``repr`` embeds object addresses
+        hash process-locally (never a cross-process hit — the safe
+        direction); callers mutating closure state after compiling should
+        pass ``cache=False`` to ``repro.compile``.  Functions without
+        retrievable source (REPL, ``exec``) fall back to ``id``."""
+        import hashlib
+        import inspect
+
         parts = []
         for name, fn in self.stages:
             if STAGES.get(name) is fn:
                 parts.append(name)
-            else:
-                parts.append(f"{name}:{getattr(fn, '__qualname__', '?')}"
-                             f"@{id(fn):x}")
+                continue
+            try:
+                ident = [inspect.getsource(fn)]
+            except (OSError, TypeError):
+                ident = [f"@{id(fn):x}"]
+            if getattr(fn, "__defaults__", None):
+                ident.append(_capture_tag(fn.__defaults__))
+            for cell in getattr(fn, "__closure__", None) or ():
+                try:
+                    ident.append(_capture_tag(cell.cell_contents))
+                except ValueError:
+                    ident.append("<empty-cell>")
+            tag = hashlib.sha256(
+                "\x00".join(ident).encode()).hexdigest()[:16]
+            parts.append(f"{name}:{getattr(fn, '__qualname__', '?')}:{tag}")
         return ";".join(parts)
 
     def __repr__(self) -> str:

@@ -285,6 +285,63 @@ def estimate_tiling_cost(cdlt: Codelet, acg: ACG, plans: list[OperandPlan],
 
 
 # ---------------------------------------------------------------------------
+# The schedule-point space (search substrate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScheduleSpace:
+    """The Algorithm-1-valid schedule-point space of one (codelet, target).
+
+    ``tilings`` are the enumerated valid tilings; ``divisors`` maps each loop
+    var to its (pruned) divisor grid — the neighbourhood structure mutation
+    operators move through; ``valid`` re-checks any mutated tiling against
+    Algorithm 1, so strategies may step outside the enumerated list as long
+    as they stay inside the valid region.
+    """
+
+    tilings: list[dict[str, int]]
+    divisors: dict[str, list[int]]
+    pad_align: bool
+    probe: Codelet                 # placed+mapped (pre-tiling) codelet
+    acg: ACG
+    plans: list[OperandPlan]
+
+    def valid(self, tiling: dict[str, int]) -> bool:
+        return validate_tiling(self.probe, self.acg, self.plans, tiling,
+                               pad_align=self.pad_align)
+
+
+def schedule_space(cdlt: Codelet, acg: ACG, *, options=None, pipeline=None,
+                   max_candidates: int = 2000) -> ScheduleSpace:
+    """Enumerate the valid schedule-point space by running the pipeline's
+    pre-tiling prefix (every stage before ``tile``, including any spliced
+    target hooks) on a probe clone and applying Algorithm 1 over the
+    divisor grids — the probe sees exactly what candidate materialisation
+    will see."""
+    from .pipeline import CompileOptions, PassContext, Pipeline
+
+    ctx = PassContext(cdlt.clone(), acg, options or CompileOptions())
+    pl = pipeline or Pipeline.default().with_acg_hooks(acg)
+    names = pl.names
+    if "tile" in names:
+        pl.run(ctx, skip=names[names.index("tile"):])
+    else:
+        pl.run(ctx, until="map_compute")
+    plans = plan_operands(ctx.cdlt, acg)
+    pad = False
+    tilings = enumerate_tilings(ctx.cdlt, acg, plans,
+                                max_candidates=max_candidates)
+    if not tilings:
+        pad = True
+        tilings = enumerate_tilings(ctx.cdlt, acg, plans,
+                                    max_candidates=max_candidates,
+                                    pad_align=True)
+    divisors = {l.var: _divisors(l.trips) for l in ctx.cdlt.loops()}
+    return ScheduleSpace(tilings, divisors, pad, ctx.cdlt, acg, plans)
+
+
+# ---------------------------------------------------------------------------
 # Stage 4: loop splitting into the canonical tiled nest
 # ---------------------------------------------------------------------------
 
@@ -447,7 +504,8 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-__all__ = ["OperandPlan", "ScheduleConfig", "capability_candidates",
-           "choose_tiling", "enumerate_tilings", "estimate_tiling_cost",
-           "insert_transfers", "map_compute", "place_operands",
-           "plan_operands", "schedule", "split_loops", "validate_tiling"]
+__all__ = ["OperandPlan", "ScheduleConfig", "ScheduleSpace",
+           "capability_candidates", "choose_tiling", "enumerate_tilings",
+           "estimate_tiling_cost", "insert_transfers", "map_compute",
+           "place_operands", "plan_operands", "schedule", "schedule_space",
+           "split_loops", "validate_tiling"]

@@ -3,29 +3,60 @@
 The paper positions Covenant as the substrate that lets Ansor/FlexTensor-
 style search run against NEW accelerators: Algorithm 1 prunes the
 transformation space to *valid* schedules, and the ACG-aware cost model
-replaces on-device measurement.  This module is that loop:
+replaces on-device measurement.  This module is that loop, as a driver
+subsystem:
 
-    candidates = valid tilings (Algorithm 1)  x  unroll factors
+    space      = Algorithm-1-valid tilings x unroll factors
+                 (scheduler.schedule_space)
+    candidate  = a schedule *point* injected into the stock pass pipeline
+                 via PassContext.overrides — materialisation is exactly
+                 ``repro.compile``'s flow, never a private pass chain
     score      = mnemonic-faithful analytic cycles (cost.py)
-    search     = evolutionary: seed with the default heuristic schedule,
-                 mutate tile factors / unroll, keep the elite set.
+    strategy   = a registered SearchStrategy: ``evolutionary`` (divisor-
+                 neighbourhood mutation), ``random``, ``grid``,
+                 ``exhaustive``
 
-``search_schedule`` returns the best Codelet found plus the search trace;
-on the paper benchmarks it beats the one-shot heuristic whenever the
-heuristic's greedy tile choice is off the cost-model optimum
-(tests/test_search.py, benchmarks fig12 "+search" row).
+Drive it through the compile driver — ``repro.compile(layer, target,
+CompileOptions(search=SearchOptions(...)))`` — so searched schedules flow
+through the same artifact/cache/store path as heuristic ones; the legacy
+``search_schedule`` entry point remains as a thin wrapper.
+
+Determinism: candidate generation and mutation draw from *separate* seeded
+streams, so the same (codelet, target, options, seed) always yields an
+identical trace and winner regardless of how a strategy interleaves the
+two (tests/test_search.py asserts this).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
+from typing import Callable
 
 from . import cost as cost_mod
 from .acg import ACG
 from .codelet import Codelet
-from .scheduler import (ScheduleConfig, enumerate_tilings, map_compute,
-                        place_operands, plan_operands, validate_tiling)
+from .pipeline import CompileOptions, PassContext, Pipeline
+from .scheduler import ScheduleSpace, schedule_space
+
+# a schedule point: (sorted (var, factor) tiling items, unroll factor)
+Point = tuple[tuple, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchOptions:
+    """Knobs of one schedule search; hashable + fingerprintable so a
+    searched compile is content-addressed like any other."""
+
+    strategy: str = "evolutionary"
+    generations: int = 6
+    population: int = 16
+    elite: int = 4
+    unroll_choices: tuple = (1, 2, 4, 8)
+    seed: int = 0
+    max_candidates: int = 2000
+
+    def fingerprint(self) -> str:
+        return repr(dataclasses.astuple(self))
 
 
 @dataclasses.dataclass
@@ -34,108 +65,232 @@ class SearchResult:
     best_cycles: float
     heuristic_cycles: float
     evaluated: int
-    trace: list  # (generation, best_cycles)
+    trace: list                    # (generation, best_cycles_so_far)
+    strategy: str = "evolutionary"
+    point: dict | None = None      # winning {"tiling", "unroll_factor"};
+    #                                None when the heuristic won
+    best_ctx: PassContext | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def gain(self) -> float:
         return self.heuristic_cycles / max(self.best_cycles, 1e-9)
 
-
-def _materialise(cdlt: Codelet, acg: ACG, tiling: dict, unroll: int,
-                 pack: bool = True) -> Codelet:
-    """Build the full schedule for a given (tiling, unroll) point."""
-    from . import passes
-    from .scheduler import insert_transfers, split_loops
-
-    c = cdlt.clone()
-    place_operands(c, acg)
-    map_compute(c, acg, vectorize=True)
-    split_loops(c, tiling)
-    plans = plan_operands(c, acg)
-    insert_transfers(c, acg, plans)
-    passes.granularize(c, acg)
-    passes.vectorize(c, acg)
-    if unroll > 1:
-        passes.unroll(c, acg, unroll)
-    return c
+    def summary(self) -> dict:
+        """JSON-serialisable digest (what the artifact store persists)."""
+        return {"strategy": self.strategy, "best_cycles": self.best_cycles,
+                "heuristic_cycles": self.heuristic_cycles,
+                "evaluated": self.evaluated, "point": self.point,
+                "trace": [list(t) for t in self.trace]}
 
 
-def _score(c: Codelet, acg: ACG, pack: bool = True) -> float:
-    return cost_mod.cost(c, acg, pack=pack).cycles
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+# name -> strategy fn(space, opts, evaluate, rng_init, rng_mut) -> trace.
+# ``evaluate(point) -> cycles`` memoises and tracks the incumbent; a
+# strategy only decides *which* points to visit and in what order.
+StrategyFn = Callable[..., list]
+STRATEGIES: dict[str, StrategyFn] = {}
 
 
-def search_schedule(cdlt: Codelet, acg: ACG, *, generations: int = 6,
-                    population: int = 16, elite: int = 4,
-                    unroll_choices=(1, 2, 4, 8), seed: int = 0,
-                    max_candidates: int = 2000) -> SearchResult:
-    """Evolutionary search over Algorithm-1-valid tilings x unroll factors."""
-    from .scheduler import schedule as heuristic_schedule
+def register_strategy(name: str) -> Callable[[StrategyFn], StrategyFn]:
+    def deco(fn: StrategyFn) -> StrategyFn:
+        STRATEGIES[name] = fn
+        return fn
+    return deco
 
-    rng = random.Random(seed)
-    # candidate space (validity via Algorithm 1)
-    probe = cdlt.clone()
-    place_operands(probe, acg)
-    map_compute(probe, acg, vectorize=True)
-    plans = plan_operands(probe, acg)
-    tilings = enumerate_tilings(probe, acg, plans,
-                                max_candidates=max_candidates)
-    if not tilings:
-        tilings = enumerate_tilings(probe, acg, plans,
-                                    max_candidates=max_candidates,
-                                    pad_align=True)
-    assert tilings, f"no valid tilings for {cdlt.name} on {acg.name}"
 
-    heur = heuristic_schedule(cdlt, acg, ScheduleConfig())
-    heur_cycles = _score(heur, acg)
+def available_strategies() -> list[str]:
+    return sorted(STRATEGIES)
 
-    def random_point():
-        return (rng.randrange(len(tilings)), rng.choice(unroll_choices))
 
-    def mutate(pt):
-        ti, u = pt
-        if rng.random() < 0.5:
-            # move one loop's tile factor to a neighbouring divisor
-            ti = min(max(ti + rng.choice((-1, 1, -3, 3)), 0),
-                     len(tilings) - 1)
-        else:
-            u = rng.choice(unroll_choices)
-        return ti, u
+def _tiling_key(tiling: dict) -> tuple:
+    return tuple(sorted(tiling.items()))
 
-    evaluated = {}
 
-    def evaluate(pt):
+def _random_point(space: ScheduleSpace, unrolls, rng: random.Random) -> Point:
+    tiling = space.tilings[rng.randrange(len(space.tilings))]
+    return (_tiling_key(tiling), rng.choice(unrolls))
+
+
+def _mutate(pt: Point, space: ScheduleSpace, unrolls,
+            rng: random.Random) -> Point:
+    """Move one loop's tile factor to a neighbouring divisor on its grid
+    (staying Algorithm-1-valid), or flip the unroll factor."""
+    tiling, u = dict(pt[0]), pt[1]
+    if rng.random() < 0.5 and tiling:
+        var = rng.choice(sorted(tiling))
+        grid = space.divisors.get(var, [tiling[var]])
+        i = grid.index(tiling[var]) if tiling[var] in grid else 0
+        j = min(max(i + rng.choice((-1, 1)), 0), len(grid) - 1)
+        cand = dict(tiling, **{var: grid[j]})
+        if space.valid(cand):
+            tiling = cand
+    else:
+        u = rng.choice(unrolls)
+    return (_tiling_key(tiling), u)
+
+
+@register_strategy("evolutionary")
+def evolutionary(space, opts: SearchOptions, evaluate, rng_init, rng_mut):
+    pop = [_random_point(space, opts.unroll_choices, rng_init)
+           for _ in range(opts.population)]
+    trace, best = [], float("inf")
+    for gen in range(opts.generations):
+        scored = sorted(pop, key=evaluate)
+        best = min(best, evaluate(scored[0]))
+        trace.append((gen, best))
+        elites = scored[:opts.elite]
+        pop = list(elites)
+        while len(pop) < opts.population:
+            pop.append(_mutate(rng_mut.choice(elites), space,
+                               opts.unroll_choices, rng_mut))
+    return trace
+
+
+@register_strategy("random")
+def random_search(space, opts: SearchOptions, evaluate, rng_init, rng_mut):
+    trace, best = [], float("inf")
+    for gen in range(opts.generations):
+        for _ in range(opts.population):
+            best = min(best, evaluate(
+                _random_point(space, opts.unroll_choices, rng_init)))
+        trace.append((gen, best))
+    return trace
+
+
+@register_strategy("grid")
+def grid_search(space, opts: SearchOptions, evaluate, rng_init, rng_mut):
+    """Evenly strided sweep of tilings x unrolls within the same
+    generations*population evaluation budget as the other strategies."""
+    budget = max(1, opts.generations * opts.population)
+    points = [(_tiling_key(t), u) for t in space.tilings
+              for u in opts.unroll_choices]
+    stride = max(1, len(points) // budget)
+    chosen = points[::stride][:budget]
+    trace, best = [], float("inf")
+    chunk = max(1, len(chosen) // max(opts.generations, 1))
+    for gen in range(0, len(chosen), chunk):
+        for pt in chosen[gen:gen + chunk]:
+            best = min(best, evaluate(pt))
+        trace.append((gen // chunk, best))
+    return trace
+
+
+@register_strategy("exhaustive")
+def exhaustive(space, opts: SearchOptions, evaluate, rng_init, rng_mut):
+    """Every enumerated tiling x every unroll choice (the space is already
+    capped by SearchOptions.max_candidates)."""
+    trace, best = [], float("inf")
+    for gi, t in enumerate(space.tilings):
+        for u in opts.unroll_choices:
+            best = min(best, evaluate((_tiling_key(t), u)))
+        if gi % 50 == 0 or gi == len(space.tilings) - 1:
+            trace.append((gi, best))
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# candidate materialisation — through the pipeline, not a private pass chain
+# ---------------------------------------------------------------------------
+
+
+def materialise(cdlt: Codelet, acg: ACG, pipeline: Pipeline,
+                options: CompileOptions, point: dict | None) -> PassContext:
+    """Run the full compile pipeline (codegen deferred) with the schedule
+    point injected as pass-input data; ``point=None`` is the stock
+    heuristic flow."""
+    ctx = PassContext(cdlt.clone(), acg, options,
+                      overrides=dict(point) if point else {})
+    pipeline.run(ctx, skip=("codegen",))
+    return ctx
+
+
+def _score(ctx: PassContext) -> float:
+    pack = ctx.state.get("pack", ctx.options.pack)
+    return cost_mod.cost(ctx.cdlt, ctx.acg, pack=pack).cycles
+
+
+def _rng_streams(seed: int) -> tuple[random.Random, random.Random]:
+    """Separate seeded streams for candidate generation vs mutation: the
+    trace must not depend on how a strategy interleaves the two."""
+    return random.Random(seed), random.Random(seed ^ 0x9E3779B9)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def search_schedule(cdlt: Codelet, acg: ACG, *,
+                    options: CompileOptions | None = None,
+                    pipeline: Pipeline | None = None,
+                    **overrides) -> SearchResult:
+    """Search the valid schedule space of ``cdlt`` on ``acg``.
+
+    ``options`` is a ``CompileOptions`` whose ``search`` field (or
+    ``SearchOptions()``) selects the strategy/budget; keyword overrides
+    (``generations=4, seed=1, strategy="grid", ...``) tweak it — the legacy
+    call style.  Never returns a schedule worse than the heuristic.
+    """
+    opts = options if options is not None else CompileOptions()
+    if opts.search is not None and not isinstance(opts.search, SearchOptions):
+        raise TypeError(f"CompileOptions.search must be a SearchOptions, "
+                        f"got {type(opts.search)!r}")
+    sopts = opts.search if opts.search is not None else SearchOptions()
+    if overrides:
+        sopts = dataclasses.replace(sopts, **overrides)
+    if sopts.strategy not in STRATEGIES:
+        raise KeyError(f"unknown search strategy {sopts.strategy!r}; "
+                       f"registered: {available_strategies()}")
+    pl = pipeline if pipeline is not None \
+        else Pipeline.default().with_acg_hooks(acg)
+
+    space = schedule_space(cdlt, acg, options=opts, pipeline=pl,
+                           max_candidates=sopts.max_candidates)
+    assert space.tilings, f"no valid tilings for {cdlt.name} on {acg.name}"
+
+    heur_ctx = materialise(cdlt, acg, pl, opts, None)
+    heur_cycles = _score(heur_ctx)
+
+    evaluated: dict[Point, float] = {}
+    incumbent: list = [None, float("inf")]  # [point, cycles]
+
+    def evaluate(pt: Point) -> float:
         if pt in evaluated:
             return evaluated[pt]
-        ti, u = pt
         try:
-            c = _materialise(cdlt, acg, tilings[ti], u)
-            cyc = _score(c, acg)
+            ctx = materialise(cdlt, acg, pl, opts,
+                              {"tiling": dict(pt[0]), "unroll_factor": pt[1]})
+            cyc = _score(ctx)
         except Exception:
             cyc = float("inf")
         evaluated[pt] = cyc
+        if cyc < incumbent[1]:
+            incumbent[0], incumbent[1] = pt, cyc
         return cyc
 
-    pop = [random_point() for _ in range(population)]
-    trace = []
-    best_pt, best_cyc = None, float("inf")
-    for gen in range(generations):
-        scored = sorted(pop, key=evaluate)
-        if evaluate(scored[0]) < best_cyc:
-            best_pt, best_cyc = scored[0], evaluate(scored[0])
-        trace.append((gen, best_cyc))
-        elites = scored[:elite]
-        pop = list(elites)
-        while len(pop) < population:
-            pop.append(mutate(rng.choice(elites)))
+    rng_init, rng_mut = _rng_streams(sopts.seed)
+    trace = STRATEGIES[sopts.strategy](space, sopts, evaluate,
+                                       rng_init, rng_mut)
 
-    if best_cyc < heur_cycles:
-        best = _materialise(cdlt, acg, tilings[best_pt[0]], best_pt[1])
-        best.note(f"search: tiling={tilings[best_pt[0]]} "
-                  f"unroll={best_pt[1]} cycles={best_cyc:.0f} "
-                  f"(heuristic {heur_cycles:.0f})")
+    best_pt, best_cyc = incumbent
+    if best_pt is not None and best_cyc < heur_cycles:
+        point = {"tiling": dict(best_pt[0]), "unroll_factor": best_pt[1]}
+        ctx = materialise(cdlt, acg, pl, opts, point)
+        ctx.cdlt.note(f"search[{sopts.strategy}]: tiling={point['tiling']} "
+                      f"unroll={point['unroll_factor']} "
+                      f"cycles={best_cyc:.0f} (heuristic {heur_cycles:.0f})")
     else:
-        best, best_cyc = heur, heur_cycles
-    return SearchResult(best, best_cyc, heur_cycles, len(evaluated), trace)
+        ctx, best_cyc, point = heur_ctx, heur_cycles, None
+    return SearchResult(best=ctx.cdlt, best_cycles=best_cyc,
+                        heuristic_cycles=heur_cycles,
+                        evaluated=len(evaluated), trace=trace,
+                        strategy=sopts.strategy, point=point, best_ctx=ctx)
 
 
-__all__ = ["SearchResult", "search_schedule"]
+__all__ = ["STRATEGIES", "SearchOptions", "SearchResult",
+           "available_strategies", "materialise", "register_strategy",
+           "search_schedule"]

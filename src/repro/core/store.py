@@ -1,0 +1,327 @@
+"""Disk-backed, size-bounded artifact store (the ISA-Mapper measurement-
+database pattern, keyed like the in-process compile cache).
+
+One JSON file per content-addressed key.  An entry does NOT pickle the
+scheduled codelet — it serialises the *schedule decisions* (tiling +
+unroll factor + pack), the analytic cost report(s), the pass notes and the
+search digest.  A warm hit therefore restores a ``CompiledArtifact`` whose
+analytics (``cycles()`` / ``report()``) work with **zero pipeline stage
+executions**; the scheduled codelet and mnemonic program are rebuilt
+lazily — only if ``.program`` / ``.run()`` is actually touched — by
+replaying the pipeline with the stored decisions injected as pass inputs
+(no tiling enumeration, no search re-run).
+
+Robustness contract (tests/test_store.py):
+* corrupt / truncated / wrong-format entries read as a miss, the bad file
+  is deleted, and the caller recompiles cleanly;
+* the store is size-bounded: writes evict least-recently-used entries
+  (mtime order; loads bump recency) until under ``max_bytes``;
+* ``clear()`` (surfaced as ``repro.clear_cache(disk=True)``) empties it.
+
+Activate per-compile with ``CompileOptions(store=ArtifactStore(dir))`` (or
+``store="dir"``), or process-wide with the ``REPRO_CACHE_DIR`` environment
+variable — that is what makes multi-process sweeps replay warm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time as _time
+
+FORMAT = 1
+ENV_DIR = "REPRO_CACHE_DIR"
+ENV_MAX_MB = "REPRO_CACHE_MAX_MB"
+_SUFFIX = ".json"
+
+
+def compiler_signature() -> str:
+    """Digest of the stock compiler's source (pipeline stages, scheduler,
+    passes, cost model, codegen).  Stamped into every store entry and
+    checked on load, so a persistent REPRO_CACHE_DIR can never serve
+    schedules or cycle counts produced by a *different* compiler — the
+    content-addressed key only covers inputs, not the compiler itself."""
+    global _SIGNATURE
+    if _SIGNATURE is None:
+        import hashlib
+        import inspect
+
+        from . import (codegen, cost, driver, passes, pipeline, scheduler,
+                       search)
+        h = hashlib.sha256()
+        for mod in (pipeline, scheduler, passes, cost, codegen, search,
+                    driver):
+            try:
+                h.update(inspect.getsource(mod).encode())
+            except (OSError, TypeError):
+                h.update(mod.__name__.encode())
+        _SIGNATURE = h.hexdigest()[:16]
+    return _SIGNATURE
+
+
+_SIGNATURE: str | None = None
+
+
+class ArtifactStore:
+    """Content-addressed key -> schedule-decision entry, on disk."""
+
+    def __init__(self, root: str, max_bytes: int | None = None):
+        self.root = os.path.abspath(os.path.expanduser(os.fspath(root)))
+        if max_bytes is None:
+            max_bytes = int(float(os.environ.get(ENV_MAX_MB, 256)) * 2 ** 20)
+        self.max_bytes = max_bytes
+        os.makedirs(self.root, exist_ok=True)
+        self.stats = {"hits": 0, "misses": 0, "puts": 0, "evictions": 0,
+                      "corrupt": 0, "stale": 0}
+        # running size estimate: puts add to it, the (O(entries)) eviction
+        # scan only runs once it crosses max_bytes, then re-measures
+        self._approx_bytes = self.size_bytes()
+
+    # -- paths ---------------------------------------------------------------
+    def _path(self, key: str) -> str:
+        assert key and all(c in "0123456789abcdef" for c in key), key
+        return os.path.join(self.root, key + _SUFFIX)
+
+    def _entries(self) -> list[str]:
+        return self._listdir(_SUFFIX)
+
+    def _tmp_files(self) -> list[str]:
+        return self._listdir(".tmp")
+
+    def _listdir(self, suffix: str) -> list[str]:
+        try:
+            names = os.listdir(self.root)
+        except FileNotFoundError:
+            return []
+        return [os.path.join(self.root, n) for n in names
+                if n.endswith(suffix)]
+
+    # -- core ops ------------------------------------------------------------
+    def load(self, key: str) -> dict | None:
+        """The stored entry for ``key``, or None (miss).  Anything
+        unreadable — truncated JSON, foreign schema, key mismatch — is
+        treated as a miss and the offending file is removed."""
+        path = self._path(key)
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                entry = json.load(f)
+            if not isinstance(entry, dict) or entry.get("format") != FORMAT \
+                    or entry.get("key") != key or "reports" not in entry:
+                raise ValueError("foreign or incomplete entry")
+        except FileNotFoundError:
+            self.stats["misses"] += 1
+            return None
+        except Exception:
+            self.stats["corrupt"] += 1
+            self.stats["misses"] += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        if entry.get("compiler") != compiler_signature():
+            # produced by a different compiler version: the schedule and
+            # cycle counts may no longer be what this compiler would emit
+            self.stats["stale"] += 1
+            self.stats["misses"] += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        try:
+            os.utime(path, None)  # bump LRU recency
+        except OSError:
+            pass
+        self.stats["hits"] += 1
+        return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        entry = dict(entry, format=FORMAT, key=key,
+                     compiler=compiler_signature())
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(entry, f)
+            os.replace(tmp, path)  # atomic vs concurrent readers
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        self.stats["puts"] += 1
+        try:
+            self._approx_bytes += os.stat(path).st_size
+        except OSError:
+            pass
+        if self._approx_bytes > self.max_bytes:
+            self._evict(keep=path)
+
+    def invalidate(self, key: str) -> None:
+        """Forget an entry that loaded but could not be restored: delete
+        the file and reclassify the load as a corrupt miss."""
+        try:
+            os.remove(self._path(key))
+        except OSError:
+            pass
+        self.stats["hits"] -= 1
+        self.stats["misses"] += 1
+        self.stats["corrupt"] += 1
+
+    def _evict(self, keep: str | None = None) -> None:
+        """Drop least-recently-used entries until under ``max_bytes``;
+        ``keep`` (the just-written path) is never a victim, even under
+        mtime ties on coarse-timestamp filesystems, so a put always
+        sticks.  Also reaps stale ``.tmp`` leftovers of interrupted puts —
+        they are invisible to loads, so without this they would
+        accumulate unbounded."""
+        now = _time.time()
+        for p in self._tmp_files():
+            try:
+                if now - os.stat(p).st_mtime > 600:
+                    os.remove(p)
+            except OSError:
+                pass
+        files = []
+        for p in self._entries():
+            try:
+                st = os.stat(p)
+            except OSError:
+                continue
+            files.append((st.st_mtime, st.st_size, p))
+        files.sort()
+        total = sum(sz for _, sz, _ in files)
+        if keep is None and files:
+            keep = files[-1][2]  # protect the most recent entry
+        victims = [f for f in files if f[2] != keep]
+        while victims and total > self.max_bytes:
+            _, sz, victim = victims.pop(0)
+            try:
+                os.remove(victim)
+            except OSError:
+                continue
+            total -= sz
+            self.stats["evictions"] += 1
+        self._approx_bytes = total
+
+    def clear(self) -> None:
+        for p in self._entries() + self._tmp_files():
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        self._approx_bytes = 0
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries())
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def keys(self) -> list[str]:
+        return [os.path.basename(p)[:-len(_SUFFIX)] for p in self._entries()]
+
+    def size_bytes(self) -> int:
+        total = 0
+        for p in self._entries():
+            try:
+                total += os.stat(p).st_size
+            except OSError:
+                pass
+        return total
+
+    def __repr__(self) -> str:
+        return (f"ArtifactStore({self.root!r}, entries={len(self)}, "
+                f"bytes={self.size_bytes()}/{self.max_bytes})")
+
+
+# ---------------------------------------------------------------------------
+# entry (de)serialisation helpers — used by the driver
+# ---------------------------------------------------------------------------
+
+
+def entry_from_artifact(art) -> dict:
+    """Serialise a CompiledArtifact's schedule decisions + analytics.
+    Forces the default-pack cost report so a warm restore can answer
+    ``cycles()`` without running a single pass."""
+    art.report()  # ensure at least the default-pack report is cached
+    reports = {}
+    for k, val in art.ctx.state.items():
+        if isinstance(k, tuple) and len(k) == 2 and k[0] == "report":
+            reports[str(int(bool(k[1])))] = dataclasses.asdict(val)
+    # a store-restored artifact carries its decisions in ctx.overrides
+    # (state only fills on lazy rebuild); fresh compiles record them in
+    # ctx.state — prefer overrides so re-persisting never loses a
+    # searched/injected schedule
+    tiling = art.ctx.overrides.get("tiling", art.ctx.state.get("tiling"))
+    unroll = art.ctx.overrides.get("unroll_factor",
+                                   art.options.unroll_factor)
+    entry = {
+        "codelet": art.codelet.name,
+        "target": art.target,
+        "options": art.options.fingerprint(),
+        "pack": bool(art._default_pack()),
+        "tiling": dict(tiling) if tiling is not None else None,
+        "unroll_factor": int(unroll),
+        "notes": list(art.schedule_notes),
+        "reports": reports,
+    }
+    if getattr(art, "search", None) is not None:
+        entry["search"] = art.search.summary()
+    return entry
+
+
+def reports_from_entry(entry: dict) -> dict:
+    """{pack(bool): CostReport} parsed from a stored entry."""
+    from .cost import CostReport
+    return {bool(int(k)): CostReport(**v)
+            for k, v in entry["reports"].items()}
+
+
+def default_store() -> "ArtifactStore | None":
+    """The process-wide store named by ``REPRO_CACHE_DIR``, if any.  An
+    uncreatable directory disables the disk tier with a warning instead of
+    failing every compile in the process (an *explicit*
+    ``CompileOptions(store=...)`` still raises — the caller asked)."""
+    path = os.environ.get(ENV_DIR)
+    if not path:
+        return None
+    norm = os.path.abspath(os.path.expanduser(path))
+    if norm in _BROKEN:
+        return None
+    try:
+        return resolve(path)
+    except OSError as e:
+        import warnings
+        _BROKEN.add(norm)
+        warnings.warn(f"REPRO_CACHE_DIR={path!r} is unusable ({e}); "
+                      f"disk artifact store disabled for this process")
+        return None
+
+
+def resolve(store) -> "ArtifactStore | None":
+    """ArtifactStore instance | directory path | None -> store (or the
+    REPRO_CACHE_DIR default, or None).  Path lookups are memoised so every
+    compile against the same directory shares one stats-carrying object."""
+    if store is None:
+        return default_store() if os.environ.get(ENV_DIR) else None
+    if isinstance(store, ArtifactStore):
+        return store
+    path = os.path.abspath(os.path.expanduser(os.fspath(store)))
+    st = _DEFAULT.get(path)
+    if st is None:
+        st = _DEFAULT[path] = ArtifactStore(path)
+    return st
+
+
+_DEFAULT: dict[str, ArtifactStore] = {}
+_BROKEN: set[str] = set()  # REPRO_CACHE_DIR paths that failed to initialise
+
+
+__all__ = ["ArtifactStore", "ENV_DIR", "FORMAT", "compiler_signature",
+           "default_store", "entry_from_artifact", "reports_from_entry",
+           "resolve"]

@@ -1,0 +1,92 @@
+"""Covenant layer compilation for the serving/training stack.
+
+The launch layer runs real models through jax/XLA; this module is the
+bridge back to the paper's compiler: it maps an ``ArchConfig``'s per-block
+GEMM workloads (QKV/out projections, FFN matmuls, LM head) onto Covenant
+codelets and compiles them through the unified driver — ``repro.compile``
+— so serving and training jobs get accelerator cycle analytics, schedule
+search (``CompileOptions(search=...)``) and warm-start artifact-store
+replay (``REPRO_CACHE_DIR``) on the exact shapes they are about to run.
+
+This is the "remaining driver migrations" item from ROADMAP: nothing here
+hand-stitches scheduler/codegen calls; every compile goes through the
+driver's pipeline/cache/store seam.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import repro
+from repro.core import library
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGemm:
+    """One GEMM workload of an LM block: ``out[tokens, n] += x[tokens, k]
+    @ w[k, n]``."""
+
+    name: str
+    tokens: int  # rows: batch (decode) or batch*seq (train/prefill)
+    n: int
+    k: int
+
+    def build(self) -> "library.Codelet":
+        return library.gemm(self.tokens, self.n, self.k, name=self.name)
+
+
+def lm_layer_gemms(cfg, tokens: int, lm_head: bool = True) -> list[LayerGemm]:
+    """The GEMM workloads of one transformer block of ``cfg`` (plus the LM
+    head) at ``tokens`` rows.  Families without attention (pure SSM) just
+    contribute their FFN/head GEMMs."""
+    out: list[LayerGemm] = []
+    d = cfg.d_model
+    tag = cfg.name.replace(".", "_").replace("-", "_")
+    if getattr(cfg, "n_heads", 0):
+        qkv = (cfg.n_heads + 2 * max(cfg.n_kv_heads, 1)) * cfg.hd
+        out.append(LayerGemm(f"{tag}_attn_qkv", tokens, qkv, d))
+        out.append(LayerGemm(f"{tag}_attn_out", tokens, d,
+                             cfg.n_heads * cfg.hd))
+    if getattr(cfg, "d_ff", 0):
+        out.append(LayerGemm(f"{tag}_ffn_in", tokens, cfg.d_ff, d))
+        out.append(LayerGemm(f"{tag}_ffn_out", tokens, d, cfg.d_ff))
+    if lm_head and getattr(cfg, "vocab", 0):
+        out.append(LayerGemm(f"{tag}_lm_head", tokens, cfg.vocab, d))
+    return out
+
+
+def compile_layer_gemms(cfg, tokens: int, target: str = "hvx",
+                        options: "repro.CompileOptions | None" = None,
+                        ) -> list[tuple[LayerGemm, "repro.CompiledArtifact"]]:
+    """Compile every block GEMM of ``cfg`` through ``repro.compile_many``
+    (shared content-addressed cache + optional disk store/search)."""
+    gemms = lm_layer_gemms(cfg, tokens)
+    arts = repro.compile_many([g.build for g in gemms], target=target,
+                              options=options)
+    return list(zip(gemms, arts))
+
+
+def layer_report(cfg, tokens: int, target: str = "hvx",
+                 options: "repro.CompileOptions | None" = None) -> str:
+    """Human-readable per-GEMM cycle table + driver cache/store stats."""
+    pairs = compile_layer_gemms(cfg, tokens, target, options)
+    width = max(len(g.name) for g, _ in pairs)
+    lines = [f"[covenant] {cfg.name} @ {target}, tokens={tokens}"]
+    total = 0.0
+    for g, art in pairs:
+        cyc = art.cycles()
+        total += cyc
+        searched = ""
+        if art.search is not None:
+            searched = f"  search_gain=x{art.search.gain:.2f}"
+        shape = f"{g.tokens}x{g.n}x{g.k}"
+        lines.append(f"  {g.name:{width}s} {shape:16s} "
+                     f"{cyc:14.0f} cyc{searched}")
+    stats = repro.cache_stats()
+    lines.append(f"  {'block total':{width}s} {'':16s} {total:14.0f} cyc  "
+                 f"(cache hits={stats['hits']} misses={stats['misses']} "
+                 f"store_hits={stats['store_hits']})")
+    return "\n".join(lines)
+
+
+__all__ = ["LayerGemm", "compile_layer_gemms", "layer_report",
+           "lm_layer_gemms"]

@@ -5,6 +5,13 @@ Implements a minimal production serving loop: a batch of requests is
 prefixed (prefill), then decoded step-by-step with the KV cache donated
 between steps; finished sequences (EOS or max tokens) are retired and
 their slots refilled from the queue (continuous batching).
+
+Layer compilation is routed through the unified driver: before serving,
+the model's decode-shape GEMMs are compiled with ``repro.compile`` for
+``--accel-target`` (optionally with ``--accel-search`` schedule search)
+and the per-layer accelerator cycle report is printed.  With
+``REPRO_CACHE_DIR`` set, repeated launches replay these compiles from the
+disk artifact store.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro import configs
 from repro.launch.mesh import (make_host_mesh, make_production_mesh,
                                use_mesh)
@@ -31,10 +39,23 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--accel-target", default="hvx",
+                    help="Covenant target for the layer-compile report "
+                         "('none' disables it)")
+    ap.add_argument("--accel-search", action="store_true",
+                    help="schedule-search the layer compiles "
+                         "(CompileOptions(search=...))")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = get_model(cfg)
+    if args.accel_target != "none":
+        from repro.launch.layers import layer_report
+        opts = repro.CompileOptions(
+            search=repro.SearchOptions(generations=3, population=8)
+            if args.accel_search else None)
+        print(layer_report(cfg, tokens=args.batch,
+                           target=args.accel_target, options=opts))
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
     rng = np.random.default_rng(args.seed)
 

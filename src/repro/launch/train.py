@@ -40,10 +40,20 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--accel-target", default="hvx",
+                    help="Covenant target for the layer-compile report "
+                         "('none' disables it)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = get_model(cfg)
+    if args.accel_target != "none":
+        # layer compilation goes through the unified driver (repro.compile):
+        # per-GEMM accelerator cycles at the training token count, replayed
+        # from the disk artifact store when REPRO_CACHE_DIR is set
+        from repro.launch.layers import layer_report
+        print(layer_report(cfg, tokens=args.global_batch * args.seq_len,
+                           target=args.accel_target))
     mesh = make_host_mesh(args.model_axis) if args.smoke else \
         make_production_mesh(multi_pod=args.multi_pod)
     print(f"[train] {cfg.name} on mesh {dict(mesh.shape)}")

@@ -182,6 +182,96 @@ def test_compile_many_batches_and_caches():
     assert all(a is b for a, b in zip(arts, again))
 
 
+def test_search_option_routes_through_driver():
+    """CompileOptions(search=...) produces a cached artifact with the trace
+    attached, keyed separately from the heuristic compile."""
+    repro.clear_cache()
+    sopts = repro.SearchOptions(generations=3, population=8, seed=0)
+    cdlt = library.gemm(24, 32, 16, in_dtype="u8")
+    heur = repro.compile(cdlt, "hvx")
+    art = repro.compile(cdlt, "hvx", repro.CompileOptions(search=sopts))
+    assert art.cycles() <= heur.cycles()
+    assert art.search is not None
+    assert art.search.trace and art.search.evaluated > 0
+    assert art.search.heuristic_cycles == heur.cycles()
+    assert art.key != heur.key
+    again = repro.compile(cdlt, "hvx", repro.CompileOptions(search=sopts))
+    assert again is art  # searched winner served from the cache, no re-search
+
+
+def test_search_artifact_runs_correctly(rng):
+    """The searched schedule's mnemonic stream still matches the oracle."""
+    cdlt = library.gemm(8, 16, 12, in_dtype="u8")
+    art = repro.compile(
+        cdlt, "hvx",
+        repro.CompileOptions(search=repro.SearchOptions(
+            strategy="exhaustive", max_candidates=64)),
+        cache=False)
+    assert art.verify(random_inputs(cdlt, rng, 0, 5))
+
+
+def test_store_option_accepts_path(tmp_path):
+    """CompileOptions(store=<path>) resolves to a shared ArtifactStore and
+    does not perturb the cache key (a store is a location, not an input)."""
+    repro.clear_cache()
+    stored = repro.compile(
+        library.gemm(8, 16, 12, in_dtype="u8"), "hvx",
+        repro.CompileOptions(store=str(tmp_path)))
+    plain = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx")
+    assert plain is stored  # same key: the in-process tier answered
+    repro.clear_cache()
+    warm = repro.compile(library.gemm(8, 16, 12, in_dtype="u8"), "hvx",
+                         repro.CompileOptions(store=str(tmp_path)))
+    assert warm.ctx.executed == [] and warm.cycles() == stored.cycles()
+
+
+def test_search_option_must_be_search_options():
+    with pytest.raises(TypeError):
+        repro.compile(library.gemm(4, 8, 4, in_dtype="u8"), "hvx",
+                      repro.CompileOptions(search={"strategy": "grid"}),
+                      cache=False)
+
+
+def test_custom_stage_fingerprint_is_process_stable(tmp_path):
+    """Custom pass fns are fingerprinted by source hash, not object id, so
+    a BYOC target's store keys survive process restarts.  Emulate two
+    processes by importing the same hook module twice."""
+    import importlib.util
+
+    mod_file = tmp_path / "hookmod.py"
+    mod_file.write_text("def no_unroll(ctx):\n    pass\n")
+
+    def load(name):
+        spec = importlib.util.spec_from_file_location(name, mod_file)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod.no_unroll
+
+    fn_a, fn_b = load("hookmod_a"), load("hookmod_b")
+    assert fn_a is not fn_b
+    fp_a = Pipeline.default().override("unroll", fn_a).fingerprint()
+    fp_b = Pipeline.default().override("unroll", fn_b).fingerprint()
+    assert fp_a == fp_b
+    import re  # the custom stage carries a source-hash tag, not an id
+    assert re.search(r"unroll:.*:[0-9a-f]{16}(;|$)", fp_a)
+
+
+def test_closure_captures_distinguish_stage_fingerprints():
+    """Two closures from one factory with different captured parameters
+    must NOT alias to the same cache key."""
+    def make_stage(factor):
+        def stage(ctx):
+            ctx.cdlt.note(f"custom: {factor}")
+        return stage
+
+    fp2 = Pipeline.default().override("unroll", make_stage(2)).fingerprint()
+    fp8 = Pipeline.default().override("unroll", make_stage(8)).fingerprint()
+    assert fp2 != fp8
+    # and the same capture is stable across factory calls
+    assert fp2 == Pipeline.default().override(
+        "unroll", make_stage(2)).fingerprint()
+
+
 def test_register_target():
     repro.register_target("hvx_nounroll", targets.hvx_acg,
                           pass_overrides={"unroll": lambda ctx: None})

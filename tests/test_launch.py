@@ -98,6 +98,28 @@ def test_mini_dryrun_compiles_multidevice():
     assert "MINI_DRYRUN_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-4000:])
 
 
+def test_layer_gemms_compile_through_driver():
+    """The launch layer's Covenant bridge: per-block GEMMs of an arch
+    compile via repro.compile (shared cache), and the report renders."""
+    import repro
+    from repro.launch import layers as llayers
+
+    repro.clear_cache()
+    cfg = configs.get_config("qwen3-0.6b", smoke=True)
+    pairs = llayers.compile_layer_gemms(cfg, tokens=4)
+    names = [g.name for g, _ in pairs]
+    assert any("attn_qkv" in n for n in names)
+    assert any("lm_head" in n for n in names)
+    assert all(art.cycles() > 0 for _, art in pairs)
+    # second compile of the same shapes is all cache hits
+    before = repro.cache_stats()["misses"]
+    llayers.compile_layer_gemms(cfg, tokens=4)
+    assert repro.cache_stats()["misses"] == before
+    report = llayers.layer_report(cfg, tokens=4)
+    assert "block total" in report and cfg.name in report
+    repro.clear_cache()
+
+
 def test_cache_spec_prefers_heads_then_seq():
     from jax.sharding import PartitionSpec as P
 

@@ -1,12 +1,14 @@
-"""Search-based scheduling (core/search.py): never worse than the
-heuristic, produces functionally correct schedules, and improves at least
-one paper layer."""
+"""Search-based scheduling (core/search.py): a driver subsystem — never
+worse than the heuristic, functionally correct, deterministic per seed,
+strategy-pluggable, and materialised exclusively through the pipeline."""
 import numpy as np
 import pytest
 
 import repro
 from repro.core import interp, library, targets
-from repro.core.search import search_schedule
+from repro.core.search import (STRATEGIES, SearchOptions, _mutate,
+                               search_schedule)
+from repro.core.scheduler import schedule_space
 
 
 @pytest.mark.parametrize("target", ["hvx", "dnnweaver"])
@@ -36,3 +38,99 @@ def test_search_improves_some_layer():
         gains.append(res.gain)
     assert max(gains) > 1.0
     assert all(g >= 1.0 - 1e-9 for g in gains)
+
+
+def test_search_deterministic_trace():
+    """Same seed + same inputs -> identical trace, winner and evaluation
+    count (candidate generation and mutation draw from separate seeded
+    streams, so strategy interleaving cannot skew replay)."""
+    acg = targets.get_target("hvx")
+
+    def run():
+        return search_schedule(library.gemm(24, 32, 16, in_dtype="u8"), acg,
+                               generations=4, population=10, seed=7)
+
+    a, b = run(), run()
+    assert a.trace == b.trace
+    assert a.point == b.point
+    assert a.evaluated == b.evaluated
+    assert a.best_cycles == b.best_cycles
+
+
+def test_strategy_registry_complete_and_never_worse():
+    assert {"evolutionary", "random", "grid",
+            "exhaustive"} <= set(STRATEGIES)
+    acg = targets.get_target("hvx")
+    results = {}
+    for strategy in ("evolutionary", "random", "grid", "exhaustive"):
+        res = search_schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg,
+                              strategy=strategy, generations=2,
+                              population=6, seed=0)
+        assert res.best_cycles <= res.heuristic_cycles
+        assert res.strategy == strategy
+        results[strategy] = res
+    # exhaustive visits the whole space: nothing beats its optimum
+    assert all(results["exhaustive"].best_cycles <= r.best_cycles + 1e-9
+               for r in results.values())
+    with pytest.raises(KeyError):
+        search_schedule(library.gemm(4, 8, 4, in_dtype="u8"), acg,
+                        strategy="simulated-annealing")
+
+
+def test_mutation_moves_one_tile_to_neighbouring_divisor():
+    """The evolutionary mutation steps ONE loop's tile factor to an
+    adjacent divisor on its grid (or flips unroll) — not a +-k hop in a
+    flat enumeration index — and never leaves the valid region."""
+    import random
+    acg = targets.get_target("hvx")
+    space = schedule_space(library.gemm(24, 32, 16, in_dtype="u8"), acg)
+    base = tuple(sorted(space.tilings[0].items()))
+    rng = random.Random(3)
+    unrolls = (1, 2, 4, 8)
+    for _ in range(50):
+        new_t, new_u = _mutate((base, 4), space, unrolls, rng)
+        changed = [(v, f) for (v, f), (v0, f0) in zip(new_t, base) if f != f0]
+        if new_u != 4:
+            assert not changed              # unroll flip leaves tiling alone
+            assert new_u in unrolls
+        elif changed:
+            assert len(changed) == 1        # exactly one loop moved
+            var, factor = changed[0]
+            grid = space.divisors[var]
+            old = dict(base)[var]
+            assert abs(grid.index(factor) - grid.index(old)) == 1
+            assert space.valid(dict(new_t))
+
+
+def test_search_space_is_pipeline_fed():
+    """schedule_space runs the whole pre-tiling pipeline prefix (honouring
+    target hooks, including ones spliced after map_compute), so search
+    enumerates against exactly what candidate materialisation sees."""
+    acg = targets.get_target("hvx")
+    seen = []
+    acg.extra_passes.append(
+        ("after:place", "probe-spy", lambda ctx: seen.append("early")))
+    acg.extra_passes.append(
+        ("after:map_compute", "late-spy", lambda ctx: seen.append("late")))
+    try:
+        space = schedule_space(library.gemm(8, 16, 12, in_dtype="u8"), acg)
+    finally:
+        acg.extra_passes.clear()
+    assert seen == ["early", "late"]
+    assert space.tilings and all(space.valid(t) for t in space.tilings[:20])
+
+
+def test_driver_search_option_every_paper_layer_both_targets():
+    """Acceptance: CompileOptions(search=...) returns an artifact at least
+    as good as the heuristic for every paper layer on both targets, with
+    the search trace attached, under the same content-addressed scheme."""
+    sopts = repro.SearchOptions(strategy="random", generations=1,
+                                population=4, seed=0, max_candidates=128)
+    for target in ("hvx", "dnnweaver"):
+        for spec in library.PAPER_LAYERS:
+            heur = repro.compile(spec, target)
+            art = repro.compile(spec, target,
+                                repro.CompileOptions(search=sopts))
+            assert art.cycles() <= heur.cycles() + 1e-9, (spec.key, target)
+            assert art.search is not None and art.search.trace
+            assert art.key != heur.key      # searched compile is its own key

@@ -1,0 +1,258 @@
+"""Disk-backed ArtifactStore (core/store.py): warm restores run zero
+pipeline stages and rebuild lazily; corrupt entries fall back to a clean
+recompile; the size bound evicts LRU; ``clear_cache(disk=True)`` empties
+it; and a *fresh process* replays a warm sweep as store hits only."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import repro
+from repro.core import library
+from repro.core.store import ArtifactStore
+
+pytestmark = pytest.mark.store
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def store(tmp_path):
+    repro.clear_cache()
+    yield ArtifactStore(str(tmp_path / "store"))
+    repro.clear_cache()
+
+
+def _gemm(k=16):
+    return library.gemm(24, 32, k, in_dtype="u8")
+
+
+# ---------------------------------------------------------------------------
+# warm restore semantics
+# ---------------------------------------------------------------------------
+
+
+def test_warm_restore_runs_zero_stages_and_replays_identically(store):
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    cycles = a1.cycles()
+    program = [m.encode() for m in a1.program.mnemonics]
+    notes = list(a1.schedule_notes)
+
+    repro.clear_cache()  # simulate a fresh process (disk survives)
+    a2 = repro.compile(_gemm(), "hvx", opts)
+    assert a2.ctx.executed == []            # no pass ran on the warm hit
+    assert a2.cycles() == cycles            # analytics from the stored report
+    assert a2.ctx.executed == []            # ...still without any pass
+    assert a2.schedule_notes == notes
+    assert repro.cache_stats()["store_hits"] == 1
+    # lazy rebuild: touching .program replays the stored schedule decisions
+    assert [m.encode() for m in a2.program.mnemonics] == program
+    assert "tile" in a2.ctx.executed
+
+
+def test_searched_artifact_roundtrips_with_trace(store):
+    opts = repro.CompileOptions(
+        store=store, search=repro.SearchOptions(generations=3, population=8,
+                                                seed=0))
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    assert a1.search is not None and a1.search.trace
+    repro.clear_cache()
+    a2 = repro.compile(_gemm(), "hvx", opts)
+    assert a2.ctx.executed == []
+    assert a2.cycles() == a1.cycles()
+    assert a2.search is not None
+    assert [tuple(t) for t in a2.search.trace] == \
+        [tuple(t) for t in a1.search.trace]
+    assert a2.search.point == a1.search.point
+    # replay (no re-search) reproduces the searched program exactly
+    assert [m.encode() for m in a2.program.mnemonics] == \
+        [m.encode() for m in a1.program.mnemonics]
+
+
+# ---------------------------------------------------------------------------
+# robustness
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_entry_falls_back_to_clean_recompile(store):
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    path = os.path.join(store.root, a1.key + ".json")
+    with open(path, "w") as f:
+        f.write('{"format": 1, "key": "tru')  # truncated write
+    repro.clear_cache()
+    a2 = repro.compile(_gemm(), "hvx", opts)
+    assert a2.cycles() == a1.cycles()
+    assert a2.ctx.executed                 # really recompiled
+    assert store.stats["corrupt"] == 1
+    assert os.path.exists(path)            # fresh entry rewritten after
+
+
+def test_stale_compiler_signature_forces_recompile(store):
+    """An entry written by a different compiler version reads as a miss
+    (and is deleted): persisted keys cover inputs, not the compiler."""
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    path = os.path.join(store.root, a1.key + ".json")
+    entry = json.load(open(path))
+    entry["compiler"] = "0badc0de0badc0de"
+    json.dump(entry, open(path, "w"))
+    repro.clear_cache()
+    a2 = repro.compile(_gemm(), "hvx", opts)
+    assert a2.ctx.executed and a2.cycles() == a1.cycles()
+    assert store.stats["stale"] == 1
+    assert json.load(open(path))["compiler"] != "0badc0de0badc0de"
+
+
+def test_semantically_broken_entry_falls_back(store):
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    path = os.path.join(store.root, a1.key + ".json")
+    entry = json.load(open(path))
+    entry["reports"] = {"1": {"bogus_field": 1}}  # schema drift
+    json.dump(entry, open(path, "w"))
+    repro.clear_cache()
+    a2 = repro.compile(_gemm(), "hvx", opts)
+    assert a2.ctx.executed and a2.cycles() == a1.cycles()
+    assert store.stats["corrupt"] == 1
+
+
+# ---------------------------------------------------------------------------
+# size bound / LRU
+# ---------------------------------------------------------------------------
+
+
+def test_size_bound_evicts_least_recently_used(tmp_path):
+    repro.clear_cache()
+    st = ArtifactStore(str(tmp_path), max_bytes=1)  # everything over budget
+    opts = repro.CompileOptions(store=st)
+    arts = [repro.compile(_gemm(k), "hvx", opts) for k in (8, 16, 24)]
+    # bound of 1 byte: every put evicts all older entries; newest survives
+    assert st.keys() == [arts[-1].key]
+    assert st.stats["evictions"] == 2
+    repro.clear_cache()
+
+
+def test_load_bumps_lru_recency(tmp_path):
+    repro.clear_cache()
+    st = ArtifactStore(str(tmp_path), max_bytes=10 ** 9)
+    opts = repro.CompileOptions(store=st)
+    a_old = repro.compile(_gemm(8), "hvx", opts)
+    a_new = repro.compile(_gemm(16), "hvx", opts)
+    # age both entries, then touch the *older* one via a warm load
+    for art, age in ((a_old, 2000), (a_new, 1000)):
+        p = os.path.join(st.root, art.key + ".json")
+        past = os.stat(p).st_mtime - age
+        os.utime(p, (past, past))
+    assert st.load(a_old.key) is not None   # bumps a_old to most recent
+    # shrink the bound so exactly one entry must go: the LRU is now a_new
+    st.max_bytes = st.size_bytes() - 1
+    st._evict()
+    keys = set(st.keys())
+    assert a_old.key in keys
+    assert a_new.key not in keys
+    assert st.stats["evictions"] == 1
+    repro.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# clearing
+# ---------------------------------------------------------------------------
+
+
+def test_clear_cache_disk_empties_store(store):
+    opts = repro.CompileOptions(store=store)
+    repro.compile(_gemm(), "hvx", opts)
+    repro.compile(_gemm(8), "hvx", opts)
+    assert len(store) == 2
+    repro.clear_cache(disk=True, store=store)
+    assert len(store) == 0
+    assert repro.cache_stats()["size"] == 0
+
+
+def test_in_process_hit_backfills_late_configured_store(tmp_path):
+    """A key compiled before the store existed is persisted the next time
+    it is requested with a store configured — warm replay still works."""
+    repro.clear_cache()
+    plain = repro.compile(_gemm(), "hvx")             # no store yet
+    st = ArtifactStore(str(tmp_path))
+    hit = repro.compile(_gemm(), "hvx", repro.CompileOptions(store=st))
+    assert hit is plain and plain.key in st           # backfilled on the hit
+    repro.clear_cache()
+    warm = repro.compile(_gemm(), "hvx", repro.CompileOptions(store=st))
+    assert warm.ctx.executed == [] and warm.cycles() == plain.cycles()
+    repro.clear_cache()
+
+
+def test_unusable_env_store_disables_disk_tier(tmp_path, monkeypatch):
+    """A bad REPRO_CACHE_DIR must not fail compiles — it warns once and
+    runs memory-only."""
+    target = tmp_path / "blocker"
+    target.write_text("not a directory")
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(target / "store"))
+    repro.clear_cache()
+    with pytest.warns(UserWarning, match="REPRO_CACHE_DIR"):
+        art = repro.compile(_gemm(), "hvx")
+    assert art.cycles() > 0
+    repro.compile(_gemm(8), "hvx")  # no second warning, still compiles
+    repro.clear_cache()
+
+
+def test_env_var_names_default_store(tmp_path, monkeypatch):
+    repro.clear_cache()
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "envstore"))
+    art = repro.compile(library.gemm(12, 8, 4, in_dtype="u8"), "hvx")
+    assert os.path.exists(
+        os.path.join(str(tmp_path / "envstore"), art.key + ".json"))
+    repro.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# the multi-process contract
+# ---------------------------------------------------------------------------
+
+_SWEEP = r"""
+import json, sys
+import repro
+from repro.core import library
+
+items = [library.gemm(24, 32, 16, in_dtype="u8"),
+         library.gemm(8, 16, 12, in_dtype="u8"),
+         "DLRM-FC4"]
+arts = repro.compile_many(items, target="hvx")
+arts += [repro.compile(
+    library.gemm(24, 32, 16, in_dtype="u8"), "dnnweaver",
+    repro.CompileOptions(search=repro.SearchOptions(generations=2,
+                                                    population=6)))]
+print(json.dumps({
+    "cycles": [a.cycles() for a in arts],
+    "stages_run": sum(len(a.ctx.executed) for a in arts),
+    "stats": repro.cache_stats(),
+}))
+"""
+
+
+def test_second_process_warm_sweep_is_store_hits_only(tmp_path):
+    """A fresh process compiling a warm sweep executes ZERO scheduling or
+    search passes — every artifact restores from the disk store."""
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_CACHE_DIR=str(tmp_path / "store"))
+
+    def run():
+        r = subprocess.run([sys.executable, "-c", _SWEEP],
+                           capture_output=True, text=True, env=env, cwd=ROOT,
+                           timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        return json.loads(r.stdout.strip().splitlines()[-1])
+
+    cold = run()
+    warm = run()
+    assert cold["stats"]["store_misses"] == 4
+    assert cold["stages_run"] > 0
+    assert warm["stats"]["store_hits"] == 4
+    assert warm["stats"]["store_misses"] == 0
+    assert warm["stages_run"] == 0          # no scheduling/search pass ran
+    assert warm["cycles"] == cold["cycles"]
