@@ -108,6 +108,37 @@ def fig12_search(emit) -> dict:
     return gains
 
 
+# Architecture family for the adaptability sweep (§2's headline claim as a
+# benchmark): the registry resolves derived-variant names straight from the
+# bundled covenant specs — no compiler edits, no new modules.
+VARIANTS = ("dnnweaver", "dnnweaver@pe=32x32", "dnnweaver@pe=16x16")
+
+
+def fig14_variants(emit) -> dict:
+    """Beyond-paper: recompile paper layers across a PE-array family
+    derived with ``spec.derive`` (string-addressed, content-keyed).  The
+    per-variant cycle ratios quantify how much performance the 64x64 array
+    buys over scaled-down family members — the design-space-sweep workload
+    of arXiv 2111.15024 on top of the covenant registry."""
+    table: dict[str, dict] = {}
+    cfg = CONFIGS["+vec+pack+unroll"]
+    for spec in library.PAPER_LAYERS:
+        arts = repro.compile_many([(spec, v) for v in VARIANTS], options=cfg)
+        table[spec.key] = {v: a.cycles() for v, a in zip(VARIANTS, arts)}
+        keys = {a.key for a in arts}
+        assert len(keys) == len(VARIANTS), "variants must key separately"
+        ratios = " ".join(
+            f"{v.partition('@')[2] or 'base'}=x"
+            f"{table[spec.key][v] / table[spec.key][VARIANTS[0]]:.2f}"
+            for v in VARIANTS[1:])
+        emit(f"fig14/{spec.key},0,{ratios}")
+    for v in VARIANTS[1:]:
+        rs = [table[k][v] / table[k][VARIANTS[0]] for k in table]
+        gmean = math.exp(statistics.mean(math.log(max(r, 1e-9)) for r in rs))
+        emit(f"fig14/geomean_{v.partition('@')[2]},0,x{gmean:.2f}")
+    return table
+
+
 def fig13(emit) -> dict:
     """HVX vs DNNWeaver, both fully optimized (Fig-13 protocol)."""
     cfg = CONFIGS["+vec+pack+unroll"]
@@ -124,5 +155,5 @@ def fig13(emit) -> dict:
     return ratios
 
 
-__all__ = ["CONFIGS", "SEARCH", "fig11", "fig12", "fig12_search", "fig13",
-           "layer_cycles"]
+__all__ = ["CONFIGS", "SEARCH", "VARIANTS", "fig11", "fig12", "fig12_search",
+           "fig13", "fig14_variants", "layer_cycles"]

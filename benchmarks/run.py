@@ -17,7 +17,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list of {fig11,fig12,fig13,roofline,kernels}")
+                    help="comma list of {fig11,fig12,fig12s,fig13,fig14,"
+                         "roofline,kernels}")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--expect-store-hits", action="store_true",
                     help="fail unless every compile was a disk-store hit "
@@ -42,6 +43,9 @@ def main() -> None:
     if only is None or "fig13" in only:
         from benchmarks.paper_figs import fig13
         fig13(emit)
+    if only is None or "fig14" in only:
+        from benchmarks.paper_figs import fig14_variants
+        fig14_variants(emit)
     if only is None or "kernels" in only:
         from benchmarks.kernels_bench import run as krun
         krun(emit)

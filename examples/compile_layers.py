@@ -3,8 +3,14 @@
 behind Figs 11/13).  Artifacts are cached content-addressed, so re-running
 a sweep (or overlapping one, e.g. the Fig-12 ablation) re-uses compiles.
 
+Extra positional arguments are target names — any ``repro.targets`` name,
+including derived variants — appended as columns:
+
     PYTHONPATH=src python examples/compile_layers.py
+    PYTHONPATH=src python examples/compile_layers.py dnnweaver@pe=32x32
 """
+import sys
+
 import repro
 from repro.core import library
 
@@ -12,21 +18,30 @@ OPT = repro.CompileOptions(vectorize=True, unroll=True, pack=True)
 BASE = repro.CompileOptions(vectorize=False, unroll=False, pack=False)
 
 
-def main() -> None:
+def main(extra_targets: list[str] = ()) -> None:
     base_arts = repro.compile_many(library.PAPER_LAYERS, target="hvx",
                                    options=BASE)
     opt_arts = repro.compile_many(library.PAPER_LAYERS, target="hvx",
                                   options=OPT)
     dnnw_arts = repro.compile_many(library.PAPER_LAYERS, target="dnnweaver",
                                    options=OPT)
+    # one heterogeneous batch covers every (layer, extra target) point
+    extra = repro.compile_many(
+        [(spec, t) for t in extra_targets for spec in library.PAPER_LAYERS],
+        options=OPT)
+    cols = "".join(f" {t[:20]:>20s}" for t in extra_targets)
     print(f"{'layer':22s} {'base(HVX)':>12s} {'opt(HVX)':>12s} "
-          f"{'speedup':>8s} {'opt(DNNW)':>12s}")
-    for spec, b, o, d in zip(library.PAPER_LAYERS, base_arts, opt_arts,
-                             dnnw_arts):
+          f"{'speedup':>8s} {'opt(DNNW)':>12s}{cols}")
+    n = len(library.PAPER_LAYERS)
+    for i, (spec, b, o, d) in enumerate(zip(library.PAPER_LAYERS, base_arts,
+                                            opt_arts, dnnw_arts)):
         base, opt, dn = b.cycles(), o.cycles(), d.cycles()
-        print(f"{spec.key:22s} {base:12.0f} {opt:12.0f} {base / opt:8.1f} "
-              f"{dn:12.0f}")
+        row = (f"{spec.key:22s} {base:12.0f} {opt:12.0f} {base / opt:8.1f} "
+               f"{dn:12.0f}")
+        for t in range(len(extra_targets)):
+            row += f" {extra[t * n + i].cycles():20.0f}"
+        print(row)
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -42,6 +42,15 @@ def main() -> None:
         # from the content-addressed cache: the very same artifact comes back
         assert repro.compile(cdlt, target) is art
 
+    # targets are addressable by name everywhere — including *derived
+    # variants*: the registry parses "base@key=value" and derives the
+    # covenant spec on the fly (the paper's adaptability claim, one string)
+    half = repro.compile("DLRM-FC1", "dnnweaver@pe=32x32")
+    full = repro.compile("DLRM-FC1", "dnnweaver")
+    print(f"=== DLRM-FC1 on dnnweaver@pe=32x32 ===\n   "
+          f"{half.cycles():.0f} cyc vs {full.cycles():.0f} cyc on the "
+          f"64x64 array (distinct store keys: {half.key != full.key})")
+
     stats = repro.cache_stats()
     print(f"compile cache: {stats['hits']} hits / {stats['misses']} misses")
 

@@ -11,18 +11,38 @@ Top-level API (the unified compile driver):
     art.cycles()           # mnemonic-faithful analytic cycles
     art.listing()          # mnemonic program listing
 
+Targets are addressable by string name everywhere (``repro.targets``:
+bundled covenant specs, ``register``-ed ones, and derived variants like
+``"dnnweaver@pe=32x32"``); accelerators are *defined* as declarative
+specs (``repro.acg_spec`` / ``repro.ACGSpec``) and validated with
+``repro.validate_spec`` / ``repro.check_covenant``.
+
 Heavier subsystems (``repro.kernels``, ``repro.models``, ``repro.launch``,
 ...) depend on jax and are imported on demand — importing ``repro`` itself
 only pulls in the numpy-based Covenant core.
 """
+from repro.core.covenant import CovenantError, check_covenant, validate_acg
 from repro.core.driver import (ArtifactStore, CompiledArtifact,
                                SearchOptions, SearchResult,
                                available_targets, cache_stats, clear_cache,
                                compile, compile_many, register_target)
 from repro.core.pipeline import CompileOptions, Pipeline
+from repro.core.spec import ACGSpec, SpecError, acg_spec, validate_spec
+
+
+def __getattr__(name: str):
+    # ``repro.targets`` (the string-addressable registry facade) is served
+    # lazily so ``python -m repro.targets`` does not double-import it.
+    if name == "targets":
+        import repro.targets as targets
+        return targets
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
-    "ArtifactStore", "CompileOptions", "CompiledArtifact", "Pipeline",
-    "SearchOptions", "SearchResult", "available_targets", "cache_stats",
-    "clear_cache", "compile", "compile_many", "register_target",
+    "ACGSpec", "ArtifactStore", "CompileOptions", "CompiledArtifact",
+    "CovenantError", "Pipeline", "SearchOptions", "SearchResult",
+    "SpecError", "acg_spec", "available_targets", "cache_stats",
+    "check_covenant", "clear_cache", "compile", "compile_many",
+    "register_target", "targets", "validate_acg", "validate_spec",
 ]

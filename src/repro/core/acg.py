@@ -292,6 +292,20 @@ class ACG:
         self.extra_passes: list[tuple[str, str, object]] = []
         self._g = nx.DiGraph()
 
+    # -- declarative covenant specs (core/spec.py) ---------------------------
+    @classmethod
+    def from_spec(cls, spec) -> "ACG":
+        """Build an ACG from a declarative ``spec.ACGSpec`` (validated)."""
+        from .spec import build_acg
+        return build_acg(spec)
+
+    def to_spec(self):
+        """Snapshot this graph into its canonical ``spec.ACGSpec`` — the
+        round-trip partner of ``from_spec`` and the basis of the ACG
+        content fingerprint used by the compile cache and artifact store."""
+        from .spec import spec_of
+        return spec_of(self)
+
     # -- construction -------------------------------------------------------
     def add_memory(self, name: str, data_width: int, banks: int, depth: int,
                    offchip: bool = False) -> MemoryNode:

@@ -12,11 +12,13 @@ Everything the examples, benchmarks and tests used to hand-stitch
 
 Design points:
 
-* **Target registry** — ``target`` is a name from ``targets.TARGETS`` (extend
-  with ``register_target``) or an ACG instance; per-ACG pass hooks
-  (``acg.pass_overrides`` / ``acg.extra_passes``) are applied to the stock
-  pipeline automatically, so bringing your own codegen is attribute-plus-hook
-  work, never a compiler fork.
+* **Target registry** — ``target`` is a registry name (``repro.targets``:
+  bundled covenant specs plus ``register``-ed ones, including derived
+  variants like ``"dnnweaver@pe=32x32"``), an ``ACGSpec``, or an ACG
+  instance; per-ACG pass hooks (``acg.pass_overrides`` /
+  ``acg.extra_passes``) are applied to the stock pipeline automatically,
+  so bringing your own codegen is attribute-plus-hook work, never a
+  compiler fork.
 * **Content-addressed cache** — artifacts are keyed by (codelet fingerprint,
   ACG fingerprint, options fingerprint, pipeline fingerprint); a repeated
   ``compile`` of the same inputs returns the *same artifact object* without
@@ -36,6 +38,7 @@ import numpy as np
 
 from . import cost as cost_mod
 from . import library as library_mod
+from . import spec as spec_mod
 from . import store as store_mod
 from . import stream as stream_mod
 from . import targets as targets_mod
@@ -67,11 +70,13 @@ def codelet_fingerprint(cdlt: Codelet) -> str:
 
 
 def acg_fingerprint(acg: ACG) -> str:
-    """Content hash of a target: structure, knobs, ports and vocabulary."""
-    ports = repr(sorted(acg.operand_ports.items()))
-    mnems = ",".join(sorted(acg.mnemonics))
-    return _sha(acg.describe(), str(acg.issue_slots), str(acg.loop_overhead),
-                ports, mnems)
+    """Content hash of a target: the canonical covenant-spec fingerprint
+    (``acg.to_spec().fingerprint()``).  Unlike the old describe()-based
+    hash this covers mnemonic *field layouts* too, so two in-memory ACGs
+    sharing a name can never alias in the cache or the artifact store, and
+    a mutated ACG re-fingerprints to a fresh key instead of collecting a
+    stale warm hit."""
+    return acg.to_spec().fingerprint()
 
 
 # ---------------------------------------------------------------------------
@@ -211,31 +216,54 @@ def register_target(name: str, factory, *, pass_overrides: dict | None = None,
 
 
 def available_targets() -> list[str]:
-    return sorted(targets_mod.TARGETS)
+    return targets_mod.list_targets()
 
 
-# name -> (factory, acg, fingerprint): building a full ACG (graph + mnemonic
-# vocabulary) and hashing its description costs ~0.5ms — pointless on every
-# cache hit of a sweep.  The factory identity is stored so that direct
-# mutation of targets.TARGETS (the registry's public idiom) invalidates the
-# entry; ACG structure is immutable post-construction by convention (pass
-# *hooks* are fingerprinted separately, via the pipeline).
+# name -> (factory, acg, pristine_fingerprint): building a full ACG (graph
+# + mnemonic vocabulary) costs ~0.5ms — pointless on every cache hit of a
+# sweep, so resolved names (incl. derived variants) memoise the built
+# graph.  The factory identity is stored so that direct mutation of
+# targets.TARGETS (the registry's public idiom) invalidates the entry; the
+# fingerprint taken at build time is stored so that mutation of the shared
+# instance is *detected* on the next resolve — a registered name always
+# compiles the architecture it was registered as, never a drifted copy —
+# by re-fingerprinting the live instance every time.
 _TARGETS_RESOLVED: dict[str, tuple[object, ACG, str]] = {}
+# spec fingerprint -> built ACG.  The spec is frozen so the *build* is
+# memoisable (keyed by fingerprint, not the object: attrs may hold
+# unhashable values), but the built graph is a live, mutable object — its
+# fingerprint is recomputed per resolve, exactly like the name path, so a
+# caller mutating the shared instance never rides a stale key.
+_SPECS_RESOLVED: dict[str, ACG] = {}
 
 
 def _resolve_target(target) -> tuple[ACG, str]:
-    """-> (acg, acg_fingerprint)."""
+    """-> (acg, acg_fingerprint).  ``target`` may be a registry name
+    (including a ``base@key=value`` derived-variant name), an ``ACGSpec``,
+    or an ACG instance."""
     if isinstance(target, ACG):
         return target, acg_fingerprint(target)
+    if isinstance(target, spec_mod.ACGSpec):
+        fp = target.fingerprint()
+        acg = _SPECS_RESOLVED.get(fp)
+        if acg is None or acg_fingerprint(acg) != fp:
+            # miss, or the shared instance was mutated away from its spec:
+            # rebuild so a pristine spec always compiles a faithful graph
+            acg = _SPECS_RESOLVED[fp] = ACG.from_spec(target)
+        return acg, fp
     if isinstance(target, str):
-        factory = targets_mod.TARGETS.get(target)
+        # memo-invalidation identity shares targets.resolve_factory's
+        # one rule (exact registered name wins over the base)
+        factory = targets_mod.resolve_factory(target)
         cached = _TARGETS_RESOLVED.get(target)
-        if cached is None or cached[0] is not factory:
+        if cached is None or cached[0] is not factory \
+                or acg_fingerprint(cached[1]) != cached[2]:
             acg = targets_mod.get_target(target)  # KeyError for unknown
             cached = (factory, acg, acg_fingerprint(acg))
             _TARGETS_RESOLVED[target] = cached
         return cached[1], cached[2]
-    raise TypeError(f"target must be a name or an ACG, got {type(target)!r}")
+    raise TypeError(
+        f"target must be a name, an ACGSpec or an ACG, got {type(target)!r}")
 
 
 def _resolve_codelet(obj) -> Codelet:
@@ -271,6 +299,10 @@ def clear_cache(disk: bool = False, store=None) -> None:
     """Empty the in-process cache; ``disk=True`` also empties the disk
     store (``store`` argument, else the REPRO_CACHE_DIR default)."""
     _CACHE.clear()
+    # target-resolution memos grow one built ACG per distinct variant name
+    # / spec; a cache clear is the documented reset point between sweeps
+    _TARGETS_RESOLVED.clear()
+    _SPECS_RESOLVED.clear()
     for k in _STATS:
         _STATS[k] = 0
     if disk:
@@ -323,6 +355,10 @@ def compile(codelet_or_layer, target="hvx",
             cache: bool = True) -> CompiledArtifact:
     """Compile a codelet (or paper-layer key / LayerSpec / builder) for a
     target, returning a cached ``CompiledArtifact``.
+
+    ``target`` is a registry name — including a derived-variant name such
+    as ``"dnnweaver@pe=32x32"`` (see ``repro.targets``) — an ``ACGSpec``,
+    or an ACG instance.
 
     ``pipeline`` overrides the stock pass pipeline entirely; otherwise the
     default pipeline plus the target's ACG hooks is used.
@@ -395,8 +431,26 @@ def compile_many(items: Iterable, target="hvx",
                  options: CompileOptions | None = None,
                  **kwargs) -> list[CompiledArtifact]:
     """Batch compile: one artifact per item, in order, sharing the cache.
-    ``items`` may mix Codelets, LayerSpecs, paper-layer keys and builders."""
-    return [compile(item, target, options, **kwargs) for item in items]
+
+    ``items`` may mix Codelets, LayerSpecs, paper-layer keys and builders.
+    An item may also be a ``(codelet, target)`` pair, overriding the
+    sweep-wide ``target`` for that item — one batched sweep can span
+    several architecture variants::
+
+        repro.compile_many([
+            ("DLRM-FC1", "dnnweaver"),
+            ("DLRM-FC1", "dnnweaver@pe=32x32"),
+            "DLRM-FC2",                          # uses ``target``
+        ], target="hvx")
+    """
+    arts = []
+    for item in items:
+        if isinstance(item, tuple) and len(item) == 2:
+            it, tgt = item
+        else:
+            it, tgt = item, target
+        arts.append(compile(it, tgt, options, **kwargs))
+    return arts
 
 
 __all__ = ["ArtifactStore", "CompileOptions", "CompiledArtifact",

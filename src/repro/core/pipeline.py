@@ -59,12 +59,14 @@ class CompileOptions:
     pack: bool = True
     unroll_factor: int = 4
     max_mnemonics: int = 300_000
+    check_covenant: bool = True    # run the early covenant-validation stage
     search: object | None = None   # SearchOptions; None = one-shot heuristic
     store: object | None = None    # ArtifactStore | path; not fingerprinted
 
     def fingerprint(self) -> str:
         base = repr((self.vectorize, self.unroll, self.pack,
-                     self.unroll_factor, self.max_mnemonics))
+                     self.unroll_factor, self.max_mnemonics,
+                     self.check_covenant))
         if self.search is not None:
             fp = getattr(self.search, "fingerprint", None)
             base += ";search=" + (fp() if fp else repr(self.search))
@@ -94,6 +96,11 @@ class PassContext:
     overrides: dict = dataclasses.field(default_factory=dict)
 
 
+class PipelineError(ValueError):
+    """A pipeline edit or ACG hook referenced a stage that does not exist
+    (or used a malformed splice position)."""
+
+
 StageFn = Callable[[PassContext], None]
 
 # name -> stage function; targets and users can register additional stages.
@@ -110,6 +117,20 @@ def register_stage(name: str) -> Callable[[StageFn], StageFn]:
 # ---------------------------------------------------------------------------
 # the stock Covenant stages (§3.2 scheduling, §4 optimizations, §3.3 codegen)
 # ---------------------------------------------------------------------------
+
+
+@register_stage("covenant")
+def covenant_stage(ctx: PassContext) -> None:
+    """Early covenant validation (§2): every compute op must have a
+    supporting capability, an encodable mnemonic and a viable staging
+    route *before* scheduling starts, so a broken covenant surfaces as a
+    named ``CovenantError`` diagnostic instead of a KeyError deep in
+    tiling or codegen.  Disable with ``CompileOptions(check_covenant=
+    False)``."""
+    if not getattr(ctx.options, "check_covenant", True):
+        return
+    from .covenant import check_covenant
+    check_covenant(ctx.cdlt, ctx.acg, options=ctx.options)
 
 
 @register_stage("place")
@@ -199,7 +220,7 @@ def codegen_stage(ctx: PassContext) -> None:
 # The stock stage order.  ``SCHEDULE_STAGES`` is the prefix the legacy
 # ``scheduler.schedule`` wrapper runs (everything but code generation).
 DEFAULT_STAGE_ORDER: tuple[str, ...] = (
-    "place", "map_compute", "tile", "split", "transfers",
+    "covenant", "place", "map_compute", "tile", "split", "transfers",
     "granularize", "vectorize", "unroll", "pack", "codegen",
 )
 SCHEDULE_STAGES: tuple[str, ...] = DEFAULT_STAGE_ORDER[:-1]

@@ -201,10 +201,14 @@ def materialise(cdlt: Codelet, acg: ACG, pipeline: Pipeline,
                 options: CompileOptions, point: dict | None) -> PassContext:
     """Run the full compile pipeline (codegen deferred) with the schedule
     point injected as pass-input data; ``point=None`` is the stock
-    heuristic flow."""
+    heuristic flow.  Covenant validation depends only on (codelet, acg,
+    options) — never on the injected point — so candidate
+    materialisations skip it: the heuristic baseline already validated
+    this pairing once."""
+    skip = ("codegen",) if point is None else ("codegen", "covenant")
     ctx = PassContext(cdlt.clone(), acg, options,
                       overrides=dict(point) if point else {})
-    pipeline.run(ctx, skip=("codegen",))
+    pipeline.run(ctx, skip=skip)
     return ctx
 
 

@@ -47,11 +47,11 @@ def compiler_signature() -> str:
         import hashlib
         import inspect
 
-        from . import (codegen, cost, driver, passes, pipeline, scheduler,
-                       search)
+        from . import (codegen, cost, covenant, driver, passes, pipeline,
+                       scheduler, search, spec)
         h = hashlib.sha256()
         for mod in (pipeline, scheduler, passes, cost, codegen, search,
-                    driver):
+                    driver, covenant, spec):
             try:
                 h.update(inspect.getsource(mod).encode())
             except (OSError, TypeError):

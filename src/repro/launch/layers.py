@@ -58,11 +58,35 @@ def compile_layer_gemms(cfg, tokens: int, target: str = "hvx",
                         options: "repro.CompileOptions | None" = None,
                         ) -> list[tuple[LayerGemm, "repro.CompiledArtifact"]]:
     """Compile every block GEMM of ``cfg`` through ``repro.compile_many``
-    (shared content-addressed cache + optional disk store/search)."""
+    (shared content-addressed cache + optional disk store/search).
+
+    ``target`` is any ``repro.targets`` name, including derived-variant
+    names (``"dnnweaver@pe=32x32"``) — serving/training jobs can report
+    cycles against a perturbed accelerator without code changes."""
     gemms = lm_layer_gemms(cfg, tokens)
     arts = repro.compile_many([g.build for g in gemms], target=target,
                               options=options)
     return list(zip(gemms, arts))
+
+
+def variant_report(cfg, tokens: int, targets: "list[str]",
+                   options: "repro.CompileOptions | None" = None) -> str:
+    """Per-GEMM cycles across several targets / architecture variants in
+    one batched heterogeneous ``compile_many`` sweep — the design-space
+    view of a serving config."""
+    gemms = lm_layer_gemms(cfg, tokens)
+    pairs = [(g.build, t) for t in targets for g in gemms]
+    arts = repro.compile_many(pairs, options=options)
+    width = max(len(g.name) for g in gemms)
+    lines = [f"[covenant] {cfg.name} variants, tokens={tokens}"]
+    header = "  " + " " * width + "".join(f" {t:>24s}" for t in targets)
+    lines.append(header)
+    for gi, g in enumerate(gemms):
+        row = f"  {g.name:{width}s}"
+        for ti in range(len(targets)):
+            row += f" {arts[ti * len(gemms) + gi].cycles():24.0f}"
+        lines.append(row)
+    return "\n".join(lines)
 
 
 def layer_report(cfg, tokens: int, target: str = "hvx",
@@ -89,4 +113,4 @@ def layer_report(cfg, tokens: int, target: str = "hvx",
 
 
 __all__ = ["LayerGemm", "compile_layer_gemms", "layer_report",
-           "lm_layer_gemms"]
+           "lm_layer_gemms", "variant_report"]

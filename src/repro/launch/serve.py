@@ -40,8 +40,9 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--accel-target", default="hvx",
-                    help="Covenant target for the layer-compile report "
-                         "('none' disables it)")
+                    help="Covenant target name for the layer-compile report: "
+                         "any repro.targets name, incl. derived variants "
+                         "like 'dnnweaver@pe=32x32' ('none' disables it)")
     ap.add_argument("--accel-search", action="store_true",
                     help="schedule-search the layer compiles "
                          "(CompileOptions(search=...))")

@@ -41,8 +41,9 @@ def main() -> None:
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--accel-target", default="hvx",
-                    help="Covenant target for the layer-compile report "
-                         "('none' disables it)")
+                    help="Covenant target name for the layer-compile report: "
+                         "any repro.targets name, incl. derived variants "
+                         "like 'dnnweaver@pe=32x32' ('none' disables it)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)

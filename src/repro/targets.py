@@ -1,0 +1,130 @@
+"""``repro.targets`` — the string-addressable accelerator-target registry.
+
+Everywhere the driver API accepts a target, it accepts a *name* resolved
+here: bundled covenant specs (``example``, ``dnnweaver``, ``hvx``,
+``tpu_v5e``), specs you ``register()``, and derived-variant names
+(``"dnnweaver@pe=32x32"``, ``"hvx@issue_slots=8,VRF.depth=64"``) that
+``spec.derive()`` materializes on the fly — the paper's adaptability claim
+("design changes without complete compiler redevelopment") as a runnable
+sweep over architecture families.
+
+    import repro
+    from repro import targets
+    from repro.core.spec import acg_spec, scap, scu, sedge, smem, sop
+
+    targets.register(acg_spec("mynpu", memories=[...], computes=[...],
+                              edges=[...]))
+    art = repro.compile("BERT-LG-GEMM1", "mynpu")          # by name
+    art32 = repro.compile("BERT-LG-GEMM1", "mynpu@pe=32x32")  # variant
+
+As a module, it is also the CI ``targets-validate`` entry point::
+
+    PYTHONPATH=src python -m repro.targets            # validate + sweep
+    PYTHONPATH=src python -m repro.targets --no-sweep # structural only
+"""
+from __future__ import annotations
+
+from repro.core.covenant import (CovenantError, CovenantViolation,
+                                 check_covenant, validate_acg)
+from repro.core.spec import (ACGSpec, SpecError, acg_spec, parse_overrides,
+                             validate_spec)
+from repro.core.targets import (BUNDLED_SPECS, TARGETS, get_spec, get_target,
+                                list_targets, register_spec)
+
+# The facade API: names are the addressing scheme everywhere.
+get = get_target
+register = register_spec
+
+
+def list():  # noqa: A001 - deliberate: ``repro.targets.list()`` reads well
+    """Sorted names of every registered target."""
+    return list_targets()
+
+
+def derive(name: str, **overrides) -> ACGSpec:
+    """Derived variant of a registered target, as a spec:
+    ``derive("dnnweaver", pe="32x32")``."""
+    return get_spec(name).derive(**overrides)
+
+
+# ---------------------------------------------------------------------------
+# CI: validate every bundled spec + a small derived-variant sweep
+# ---------------------------------------------------------------------------
+
+
+def validate_bundled(sweep: bool = True, emit=print) -> int:
+    """Load every bundled spec, run ``validate_spec`` + ``validate_acg``,
+    and (optionally) push a 2-variant x 3-layer derived sweep through the
+    driver as a smoke test.  Returns the number of problems found."""
+    import repro
+
+    problems = 0
+    for name, spec in sorted(BUNDLED_SPECS.items()):
+        errs = validate_spec(spec, raise_on_error=False)
+        if not errs:
+            try:
+                acg = get_target(name)
+            except (SpecError, KeyError) as e:
+                errs = getattr(e, "problems", None) or [str(e)]
+            else:
+                errs = validate_acg(acg, raise_on_error=False)
+                if spec.fingerprint() != acg.to_spec().fingerprint():
+                    errs.append(
+                        "spec does not round-trip through ACG.from_spec")
+        for e in errs:
+            emit(f"FAIL {name}: {e}")
+        problems += len(errs)
+        if not errs:
+            emit(f"ok   {name}: valid spec, fingerprint "
+                 f"{spec.fingerprint()[:12]}, {len(spec.mnemonics)} "
+                 f"mnemonics")
+    if not sweep:
+        return problems
+    layers = ["DLRM-FC1", "DLRM-FC2", "DLRM-FC3"]
+    # variants chosen to perturb the cost report, not just the key: a PE
+    # rescale changes compute granularity, an edge re-rate changes the
+    # transfer schedule
+    variants = ["dnnweaver@pe=32x32", "hvx@edge.L2.VRF.bandwidth=512"]
+    pairs = [(layer, v) for v in variants for layer in layers]
+    arts = repro.compile_many(pairs)
+    for (layer, variant), art in zip(pairs, arts):
+        base = repro.compile(layer, variant.partition("@")[0])
+        distinct = art.key != base.key and art.cycles() != base.cycles()
+        status = "ok  " if distinct else "FAIL"
+        if not distinct:
+            problems += 1
+        emit(f"{status} {layer} @ {variant}: {art.cycles():.0f} cyc "
+             f"(base {base.cycles():.0f}), key {art.key[:12]} vs "
+             f"{base.key[:12]}")
+    return problems
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.targets",
+        description="validate bundled covenant specs (the CI "
+                    "targets-validate step)")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the derived-variant compile sweep")
+    args = ap.parse_args(argv)
+    problems = validate_bundled(sweep=not args.no_sweep)
+    if problems:
+        print(f"targets-validate: {problems} problem(s)")
+        return 1
+    print("targets-validate: all bundled specs valid")
+    return 0
+
+
+__all__ = [
+    "ACGSpec", "BUNDLED_SPECS", "CovenantError", "CovenantViolation",
+    "SpecError", "TARGETS", "acg_spec", "check_covenant", "derive", "get",
+    "get_spec", "get_target", "list", "list_targets", "parse_overrides",
+    "register", "register_spec", "validate_acg", "validate_bundled",
+    "validate_spec",
+]
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

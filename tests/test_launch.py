@@ -120,6 +120,21 @@ def test_layer_gemms_compile_through_driver():
     repro.clear_cache()
 
 
+def test_layer_variant_report_spans_architecture_family():
+    """The launch bridge sweeps derived accelerator variants by name in
+    one heterogeneous compile_many batch."""
+    import repro
+    from repro.launch import layers as llayers
+
+    repro.clear_cache()
+    cfg = configs.get_config("qwen3-0.6b", smoke=True)
+    report = llayers.variant_report(
+        cfg, tokens=4, targets=["hvx", "hvx@edge.L2.VRF.bandwidth=512"])
+    assert "hvx@edge.L2.VRF.bandwidth=512" in report
+    assert "lm_head" in report
+    repro.clear_cache()
+
+
 def test_cache_spec_prefers_heads_then_seq():
     from jax.sharding import PartitionSpec as P
 

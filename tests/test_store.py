@@ -159,6 +159,104 @@ def test_load_bumps_lru_recency(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# ACG identity: spec-fingerprint keys (no aliasing by name)
+# ---------------------------------------------------------------------------
+
+
+def test_same_name_variants_never_alias_in_the_store(store):
+    """Regression: two derived variants sharing a base *name* must key by
+    spec content, so neither can serve the other's warm entry."""
+    from repro.core import targets
+    from repro.core.acg import ACG
+
+    opts = repro.CompileOptions(store=store)
+    base = ACG.from_spec(targets.DNNWEAVER_SPEC)
+    # same registered name 'dnnweaver', different covenant
+    variant = ACG.from_spec(targets.DNNWEAVER_SPEC.derive(
+        pe="32x32", name="dnnweaver"))
+    assert base.name == variant.name == "dnnweaver"
+
+    a = repro.compile("DLRM-FC1", base, opts)
+    b = repro.compile("DLRM-FC1", variant, opts)
+    assert a.key != b.key
+    assert a.cycles() != b.cycles()
+    assert len(store) == 2
+
+    repro.clear_cache()  # fresh process; disk survives
+    warm_b = repro.compile("DLRM-FC1", variant, opts)
+    warm_a = repro.compile("DLRM-FC1", base, opts)
+    assert warm_a.ctx.executed == [] and warm_b.ctx.executed == []
+    assert warm_a.cycles() == a.cycles()
+    assert warm_b.cycles() == b.cycles()
+    assert repro.cache_stats()["store_hits"] == 2
+
+
+def test_mutated_acg_cannot_ride_a_stale_key(store):
+    """Mutating a resolved ACG — including mnemonic *field layouts*, which
+    the old describe()-based hash ignored — re-fingerprints it, so the next
+    compile misses instead of collecting a stale warm hit."""
+    from repro.core import targets
+    from repro.core.acg import MnemonicDef, ifield
+
+    opts = repro.CompileOptions(store=store)
+    acg = targets.get_target("hvx")
+    a1 = repro.compile(_gemm(), acg, opts)
+    old = acg.mnemonics["LOOPI"]
+    acg.mnemonics["LOOPI"] = MnemonicDef(
+        "LOOPI", old.opcode, (ifield("LEVEL", 16), ifield("TRIP", 32)))
+    a2 = repro.compile(_gemm(), acg, opts)
+    assert a2.key != a1.key
+    assert a2 is not a1
+
+
+def test_mutated_name_resolved_acg_is_rebuilt_pristine(store):
+    """The string-name resolution path, like the spec path, rebuilds a
+    pristine graph when the shared memoized instance has been mutated —
+    'hvx' always compiles the architecture registered under that name."""
+    from repro.core import targets
+    from repro.core.acg import MnemonicDef, ifield
+
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), "hvx", opts)
+    shared = a1.acg
+    old = shared.mnemonics["LOOPI"]
+    shared.mnemonics["LOOPI"] = MnemonicDef(
+        "LOOPI", old.opcode, (ifield("LEVEL", 16), ifield("TRIP", 32)))
+    a2 = repro.compile(_gemm(8), "hvx", opts)
+    assert a2.acg is not shared
+    assert a2.acg.to_spec().fingerprint() == targets.HVX_SPEC.fingerprint()
+
+
+def test_mutated_spec_resolved_acg_is_rebuilt_pristine(store):
+    """The ACGSpec resolution path memoizes the built graph, but a spec is
+    a *pristine* description: if the shared instance drifts (mutation),
+    the next resolve rebuilds from the spec instead of compiling the
+    mutated graph under the spec's key."""
+    from repro.core import targets
+    from repro.core.acg import MnemonicDef, ifield
+
+    opts = repro.CompileOptions(store=store)
+    a1 = repro.compile(_gemm(), targets.HVX_SPEC, opts)
+    shared = a1.acg  # the memoized instance behind the spec target
+    old = shared.mnemonics["LOOPI"]
+    shared.mnemonics["LOOPI"] = MnemonicDef(
+        "LOOPI", old.opcode, (ifield("LEVEL", 16), ifield("TRIP", 32)))
+    assert shared.to_spec().fingerprint() != targets.HVX_SPEC.fingerprint()
+    # resolution detects the drift and rebuilds a faithful graph
+    from repro.core.driver import _resolve_target
+    acg2, fp2 = _resolve_target(targets.HVX_SPEC)
+    assert acg2 is not shared
+    assert fp2 == targets.HVX_SPEC.fingerprint()
+    assert acg2.to_spec().fingerprint() == fp2
+    # the key identity is therefore the pristine spec's, before and after:
+    # a fresh process (in-process cache cleared) warm-restores a1's entry
+    repro.clear_cache()
+    a2 = repro.compile(_gemm(), targets.HVX_SPEC, opts)
+    assert a2.key == a1.key and a2.ctx.executed == []
+    assert a2.acg is not shared
+
+
+# ---------------------------------------------------------------------------
 # clearing
 # ---------------------------------------------------------------------------
 
