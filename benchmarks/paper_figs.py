@@ -114,19 +114,26 @@ def fig12_search(emit) -> dict:
 VARIANTS = ("dnnweaver", "dnnweaver@pe=32x32", "dnnweaver@pe=16x16")
 
 
-def fig14_variants(emit) -> dict:
+def fig14_variants(emit, workers: int = 1) -> dict:
     """Beyond-paper: recompile paper layers across a PE-array family
     derived with ``spec.derive`` (string-addressed, content-keyed).  The
     per-variant cycle ratios quantify how much performance the 64x64 array
     buys over scaled-down family members — the design-space-sweep workload
-    of arXiv 2111.15024 on top of the covenant registry."""
-    table: dict[str, dict] = {}
+    of arXiv 2111.15024 on top of the covenant registry.
+
+    The sweep runs through the ``repro.sweep`` coordinator — the same
+    layers x variants plan CI shards across worker processes — and the
+    report's best-variant-per-layer table is emitted as ``fig14/best``
+    rows."""
     cfg = CONFIGS["+vec+pack+unroll"]
+    report = repro.sweep([s.key for s in library.PAPER_LAYERS], VARIANTS,
+                         options=cfg, workers=workers)
+    cycles = {(r.layer, r.target): r.cycles for r in report.ok}
+    assert len(cycles) == len(library.PAPER_LAYERS) * len(VARIANTS), \
+        report.summary()  # every unit keyed separately and succeeded
+    table: dict[str, dict] = {}
     for spec in library.PAPER_LAYERS:
-        arts = repro.compile_many([(spec, v) for v in VARIANTS], options=cfg)
-        table[spec.key] = {v: a.cycles() for v, a in zip(VARIANTS, arts)}
-        keys = {a.key for a in arts}
-        assert len(keys) == len(VARIANTS), "variants must key separately"
+        table[spec.key] = {v: cycles[(spec.key, v)] for v in VARIANTS}
         ratios = " ".join(
             f"{v.partition('@')[2] or 'base'}=x"
             f"{table[spec.key][v] / table[spec.key][VARIANTS[0]]:.2f}"
@@ -136,6 +143,9 @@ def fig14_variants(emit) -> dict:
         rs = [table[k][v] / table[k][VARIANTS[0]] for k in table]
         gmean = math.exp(statistics.mean(math.log(max(r, 1e-9)) for r in rs))
         emit(f"fig14/geomean_{v.partition('@')[2]},0,x{gmean:.2f}")
+    for layer, best in sorted(report.best_by_layer().items()):
+        emit(f"fig14/best/{layer},0,variant={best.target} "
+             f"cycles={best.cycles:.0f}")
     return table
 
 

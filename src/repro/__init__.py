@@ -25,14 +25,20 @@ from repro.core.covenant import CovenantError, check_covenant, validate_acg
 from repro.core.driver import (ArtifactStore, CompiledArtifact,
                                SearchOptions, SearchResult,
                                available_targets, cache_stats, clear_cache,
-                               compile, compile_many, register_target)
+                               compile, compile_key, compile_many,
+                               register_target)
 from repro.core.pipeline import CompileOptions, Pipeline
 from repro.core.spec import ACGSpec, SpecError, acg_spec, validate_spec
+from repro.core.sweep import SweepReport, sweep
 
 
 def __getattr__(name: str):
     # ``repro.targets`` (the string-addressable registry facade) is served
     # lazily so ``python -m repro.targets`` does not double-import it.
+    # (``repro.sweep`` needs no such hook: the function imported above is
+    # the attribute, and the ``repro/sweep.py`` facade module that
+    # ``python -m repro.sweep`` / an explicit submodule import rebinds it
+    # to is itself callable.)
     if name == "targets":
         import repro.targets as targets
         return targets
@@ -42,7 +48,8 @@ def __getattr__(name: str):
 __all__ = [
     "ACGSpec", "ArtifactStore", "CompileOptions", "CompiledArtifact",
     "CovenantError", "Pipeline", "SearchOptions", "SearchResult",
-    "SpecError", "acg_spec", "available_targets", "cache_stats",
-    "check_covenant", "clear_cache", "compile", "compile_many",
-    "register_target", "targets", "validate_acg", "validate_spec",
+    "SpecError", "SweepReport", "acg_spec", "available_targets",
+    "cache_stats", "check_covenant", "clear_cache", "compile",
+    "compile_key", "compile_many", "register_target", "sweep", "targets",
+    "validate_acg", "validate_spec",
 ]

@@ -21,6 +21,24 @@ Robustness contract (tests/test_store.py):
 Activate per-compile with ``CompileOptions(store=ArtifactStore(dir))`` (or
 ``store="dir"``), or process-wide with the ``REPRO_CACHE_DIR`` environment
 variable — that is what makes multi-process sweeps replay warm.
+
+Multi-writer contract (``core/sweep.py`` coordinates fleets of worker
+processes over one store):
+
+* a single put is atomic (tmp + ``os.replace``) and is never evicted by
+  the writing process itself;
+* LRU eviction is serialised by a store-wide ``FileLock`` and never
+  touches a *foreign* entry younger than ``FRESH_GRACE`` seconds, so two
+  concurrently-evicting processes cannot delete each other's fresh puts;
+* sweep workers claim work units through per-entry claim files
+  (``claim()`` / ``release_claim()``) with a stale-claim timeout, so a
+  crashed worker's units are reclaimed instead of lost;
+* every compile a sweep performs is recorded in a monotonic, append-only
+  ``SweepJournal`` (one JSON line per event, sequence numbers issued
+  under the lock) — CI asserts "each work unit compiled exactly once"
+  straight off the journal;
+* ``gc()`` reclaims by age and size and reaps orphaned tmp/lock/claim
+  files.
 """
 from __future__ import annotations
 
@@ -34,6 +52,11 @@ FORMAT = 1
 ENV_DIR = "REPRO_CACHE_DIR"
 ENV_MAX_MB = "REPRO_CACHE_MAX_MB"
 _SUFFIX = ".json"
+# eviction never deletes another process's entry younger than this (s):
+# between a foreign put and that process's first warm read there must be
+# no window in which our own LRU scan can reap it
+FRESH_GRACE = 30.0
+_SWEEP_PREFIX = "sweep-"
 
 
 def compiler_signature() -> str:
@@ -63,6 +86,158 @@ def compiler_signature() -> str:
 _SIGNATURE: str | None = None
 
 
+def _break_stale(path: str) -> bool:
+    """Remove a stale lock/claim file *atomically claimed for removal*:
+    rename-to-unique first, so of two breakers exactly one wins and
+    neither can ever delete the file a third process just re-created
+    under the original name (the stat-then-remove TOCTOU)."""
+    tomb = f"{path}.stale-{os.getpid()}-{_time.monotonic_ns()}"
+    try:
+        os.rename(path, tomb)
+    except OSError:
+        return False  # someone else broke (or released) it first
+    try:
+        os.remove(tomb)
+    except OSError:
+        pass
+    return True
+
+
+class FileLock:
+    """Cross-process advisory lock: an ``O_CREAT|O_EXCL`` lock file.
+
+    A holder that dies leaves the file behind; any later acquirer breaks
+    the lock once it is older than ``stale_timeout`` seconds — liveness
+    over strictness, the right trade for a measurement cache (the guarded
+    operations are idempotent or re-checkable).  Use as a context manager
+    (raises ``TimeoutError``) or via ``acquire(timeout=0)`` for a
+    non-blocking attempt.
+    """
+
+    def __init__(self, path: str, stale_timeout: float = 60.0):
+        self.path = path
+        self.stale_timeout = stale_timeout
+        self._held = False
+
+    def acquire(self, timeout: float = 10.0) -> bool:
+        deadline = _time.monotonic() + timeout
+        while True:
+            try:
+                fd = os.open(self.path,
+                             os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = _time.time() - os.stat(self.path).st_mtime
+                except OSError:
+                    continue  # holder released between open and stat: retry
+                if age > self.stale_timeout:
+                    _break_stale(self.path)  # losers just retry O_EXCL
+                    continue
+                if _time.monotonic() >= deadline:
+                    return False
+                _time.sleep(0.01)
+                continue
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.write(json.dumps({"pid": os.getpid(),
+                                    "time": _time.time()}))
+            self._held = True
+            return True
+
+    def release(self) -> None:
+        if self._held:
+            self._held = False
+            try:
+                os.remove(self.path)
+            except OSError:
+                pass
+
+    def __enter__(self) -> "FileLock":
+        if not self.acquire():
+            raise TimeoutError(f"could not acquire lock {self.path!r}")
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class SweepJournal:
+    """Monotonic, append-only event log of one sweep over a store.
+
+    One JSON object per line in ``<root>/sweep-<id>/journal.jsonl``; each
+    ``append`` is issued a strictly increasing ``seq`` under a
+    ``FileLock``, so events from any number of worker processes totally
+    order, and "each work unit compiled exactly once" is a pure journal
+    query (``compile_counts``).  The journal survives warm re-runs of the
+    same sweep id — a warm run that recompiles nothing appends only
+    ``store_hit`` events, which is exactly what CI asserts.
+    """
+
+    def __init__(self, store: "ArtifactStore", sweep_id: str):
+        self.store = store
+        self.sweep_id = sweep_id
+        self.dir = store.sweep_dir(sweep_id)
+        self.path = os.path.join(self.dir, "journal.jsonl")
+        self._seq_path = os.path.join(self.dir, "journal.seq")
+        # the lock is held for one tiny read+append: a holder that lives
+        # 10s is dead, and the 30s acquire window below always outlasts
+        # the stale threshold, so a crashed holder can delay appends but
+        # never wedge the fleet
+        self._lock = FileLock(os.path.join(self.dir, "journal.lock"),
+                              stale_timeout=10.0)
+
+    def append(self, record: dict) -> int:
+        """Write ``record`` (plus ``seq``/``time``/``sweep``) as one line;
+        returns the issued sequence number."""
+        if not self._lock.acquire(timeout=30.0):
+            raise TimeoutError(
+                f"could not acquire journal lock {self._lock.path!r}")
+        try:
+            try:
+                with open(self._seq_path, "r", encoding="utf-8") as f:
+                    seq = int(f.read().strip() or 0)
+            except (OSError, ValueError):
+                seq = 0
+            seq += 1
+            line = json.dumps(dict(record, seq=seq, sweep=self.sweep_id,
+                                   time=_time.time()))
+            with open(self.path, "a", encoding="utf-8") as f:
+                f.write(line + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            tmp = f"{self._seq_path}.{os.getpid()}.tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                f.write(str(seq))
+            os.replace(tmp, self._seq_path)
+        finally:
+            self._lock.release()
+        return seq
+
+    def read(self) -> list[dict]:
+        """All events, in seq order; unreadable lines (a writer died mid-
+        line) are skipped."""
+        out = []
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                for line in f:
+                    try:
+                        out.append(json.loads(line))
+                    except ValueError:
+                        continue
+        except FileNotFoundError:
+            return []
+        out.sort(key=lambda r: r.get("seq", 0))
+        return out
+
+    def compile_counts(self) -> dict:
+        """{key: number of 'compiled' events} — the exactly-once check."""
+        counts: dict[str, int] = {}
+        for rec in self.read():
+            if rec.get("event") == "compiled":
+                k = rec.get("key", "?")
+                counts[k] = counts.get(k, 0) + 1
+        return counts
+
+
 class ArtifactStore:
     """Content-addressed key -> schedule-decision entry, on disk."""
 
@@ -73,7 +248,12 @@ class ArtifactStore:
         self.max_bytes = max_bytes
         os.makedirs(self.root, exist_ok=True)
         self.stats = {"hits": 0, "misses": 0, "puts": 0, "evictions": 0,
-                      "corrupt": 0, "stale": 0}
+                      "corrupt": 0, "stale": 0, "claims": 0, "reclaims": 0,
+                      "claim_losses": 0}
+        # entry paths THIS process wrote: eviction may reap our own fresh
+        # entries (the size bound is ours to keep) but never a foreign
+        # entry younger than FRESH_GRACE — see the multi-writer contract
+        self._own: set[str] = set()
         # running size estimate: puts add to it, the (O(entries)) eviction
         # scan only runs once it crosses max_bytes, then re-measures
         self._approx_bytes = self.size_bytes()
@@ -153,6 +333,7 @@ class ArtifactStore:
                 pass
             raise
         self.stats["puts"] += 1
+        self._own.add(path)
         try:
             self._approx_bytes += os.stat(path).st_size
         except OSError:
@@ -171,49 +352,209 @@ class ArtifactStore:
         self.stats["misses"] += 1
         self.stats["corrupt"] += 1
 
-    def _evict(self, keep: str | None = None) -> None:
+    def _evict_lock(self) -> FileLock:
+        return FileLock(os.path.join(self.root, ".evict.lock"))
+
+    def _evict(self, keep: str | None = None,
+               max_bytes: int | None = None) -> None:
         """Drop least-recently-used entries until under ``max_bytes``;
         ``keep`` (the just-written path) is never a victim, even under
         mtime ties on coarse-timestamp filesystems, so a put always
         sticks.  Also reaps stale ``.tmp`` leftovers of interrupted puts —
         they are invisible to loads, so without this they would
-        accumulate unbounded."""
-        now = _time.time()
-        for p in self._tmp_files():
-            try:
-                if now - os.stat(p).st_mtime > 600:
-                    os.remove(p)
-            except OSError:
-                pass
-        files = []
-        for p in self._entries():
-            try:
-                st = os.stat(p)
-            except OSError:
-                continue
-            files.append((st.st_mtime, st.st_size, p))
-        files.sort()
-        total = sum(sz for _, sz, _ in files)
-        if keep is None and files:
-            keep = files[-1][2]  # protect the most recent entry
-        victims = [f for f in files if f[2] != keep]
-        while victims and total > self.max_bytes:
-            _, sz, victim = victims.pop(0)
-            try:
-                os.remove(victim)
-            except OSError:
-                continue
-            total -= sz
-            self.stats["evictions"] += 1
-        self._approx_bytes = total
+        accumulate unbounded.
+
+        Concurrency: the scan runs under a non-blocking store-wide lock —
+        if another process is already evicting, we simply skip (the bound
+        is approximate; the next put retries) — and *foreign* entries
+        younger than ``FRESH_GRACE`` are never victims, so two processes
+        evicting around the same time cannot reap each other's fresh
+        puts before their writers ever read them back."""
+        lock = self._evict_lock()
+        if not lock.acquire(timeout=0):
+            return
+        try:
+            budget = self.max_bytes if max_bytes is None else max_bytes
+            now = _time.time()
+            for p in self._tmp_files():
+                try:
+                    if now - os.stat(p).st_mtime > 600:
+                        os.remove(p)
+                except OSError:
+                    pass
+            files = []
+            for p in self._entries():
+                try:
+                    st = os.stat(p)
+                except OSError:
+                    continue
+                files.append((st.st_mtime, st.st_size, p))
+            files.sort()
+            total = sum(sz for _, sz, _ in files)
+            if keep is None and files:
+                keep = files[-1][2]  # protect the most recent entry
+            victims = [f for f in files if f[2] != keep
+                       and (f[2] in self._own
+                            or now - f[0] > FRESH_GRACE)]
+            while victims and total > budget:
+                _, sz, victim = victims.pop(0)
+                try:
+                    os.remove(victim)
+                except OSError:
+                    continue
+                self._own.discard(victim)
+                total -= sz
+                self.stats["evictions"] += 1
+            self._approx_bytes = total
+        finally:
+            lock.release()
+
+    def peek(self, key: str) -> dict | None:
+        """Read an entry without touching stats, recency or the file
+        itself — the sweep coordinator's dedup probe.  Any unreadable or
+        foreign entry is simply ``None`` (the eventual ``load`` will
+        classify and clean it)."""
+        try:
+            with open(self._path(key), "r", encoding="utf-8") as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if not isinstance(entry, dict) or entry.get("format") != FORMAT \
+                or entry.get("key") != key or "reports" not in entry \
+                or entry.get("compiler") != compiler_signature():
+            return None
+        return entry
 
     def clear(self) -> None:
+        import shutil
         for p in self._entries() + self._tmp_files():
             try:
                 os.remove(p)
             except OSError:
                 pass
+        for d in self.sweep_dirs():
+            shutil.rmtree(d, ignore_errors=True)
         self._approx_bytes = 0
+
+    # -- sweep coordination (claims + journals) ------------------------------
+    def sweep_dir(self, sweep_id: str, create: bool = True) -> str:
+        """Scratch directory of one sweep (claims, journal) under the
+        store root — shared state travels with the measurement database."""
+        assert sweep_id and "/" not in sweep_id and ".." not in sweep_id, \
+            sweep_id
+        d = os.path.join(self.root, _SWEEP_PREFIX + sweep_id)
+        if create:
+            os.makedirs(d, exist_ok=True)
+        return d
+
+    def sweep_dirs(self) -> list[str]:
+        try:
+            names = os.listdir(self.root)
+        except FileNotFoundError:
+            return []
+        return [os.path.join(self.root, n) for n in names
+                if n.startswith(_SWEEP_PREFIX)
+                and os.path.isdir(os.path.join(self.root, n))]
+
+    def journal(self, sweep_id: str) -> SweepJournal:
+        return SweepJournal(self, sweep_id)
+
+    def _claim_path(self, sweep_id: str, key: str) -> str:
+        return os.path.join(self.sweep_dir(sweep_id), key + ".claim")
+
+    def claim(self, sweep_id: str, key: str, owner: str,
+              stale_timeout: float = 60.0) -> bool:
+        """Try to claim work unit ``key`` of ``sweep_id`` for ``owner``.
+
+        Exactly one live claimer wins (``O_CREAT|O_EXCL``).  A claim left
+        behind by a crashed worker is broken once older than
+        ``stale_timeout`` seconds, so its units are *reclaimed* — the
+        sweep always drains."""
+        path = self._claim_path(sweep_id, key)
+        reclaimed = False
+        while True:
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = _time.time() - os.stat(path).st_mtime
+                except OSError:
+                    continue  # released under us: retry the O_EXCL attempt
+                if age > stale_timeout:
+                    # break the dead worker's claim; _break_stale's atomic
+                    # rename guarantees a racing breaker can never delete
+                    # a claim some third worker just re-won
+                    reclaimed = _break_stale(path) or reclaimed
+                    continue
+                self.stats["claim_losses"] += 1
+                return False
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.write(json.dumps({"owner": owner, "pid": os.getpid(),
+                                    "time": _time.time()}))
+            self.stats["claims"] += 1
+            if reclaimed:
+                self.stats["reclaims"] += 1
+            return True
+
+    def release_claim(self, sweep_id: str, key: str, owner: str) -> None:
+        """Drop ``owner``'s claim.  A claim re-issued to someone else
+        after ours went stale is left alone."""
+        path = self._claim_path(sweep_id, key)
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                if json.load(f).get("owner") != owner:
+                    return
+        except (OSError, ValueError):
+            return
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+    def gc(self, max_age: float | None = None,
+           max_bytes: int | None = None,
+           claim_timeout: float = 3600.0) -> dict:
+        """Reclaim disk: drop entries older than ``max_age`` seconds, then
+        LRU-evict down to ``max_bytes`` (default: the store's own bound),
+        and reap orphaned ``.tmp`` files, stale claim files and sweep
+        scratch dirs older than ``max_age``.  Returns counts."""
+        import shutil
+        now = _time.time()
+        out = {"aged": 0, "evicted": 0, "claims_reaped": 0,
+               "sweeps_reaped": 0}
+        if max_age is not None:
+            for p in self._entries():
+                try:
+                    if now - os.stat(p).st_mtime > max_age:
+                        os.remove(p)
+                        self._own.discard(p)
+                        out["aged"] += 1
+                except OSError:
+                    pass
+        for d in self.sweep_dirs():
+            try:
+                if max_age is not None \
+                        and now - os.stat(d).st_mtime > max_age:
+                    shutil.rmtree(d, ignore_errors=True)
+                    out["sweeps_reaped"] += 1
+                    continue
+            except OSError:
+                continue
+            for n in os.listdir(d):
+                if not n.endswith(".claim"):
+                    continue
+                p = os.path.join(d, n)
+                try:
+                    if now - os.stat(p).st_mtime > claim_timeout:
+                        os.remove(p)
+                        out["claims_reaped"] += 1
+                except OSError:
+                    pass
+        before = self.stats["evictions"]
+        self._evict(max_bytes=max_bytes)
+        out["evicted"] = self.stats["evictions"] - before
+        self._approx_bytes = self.size_bytes()
+        return out
 
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
@@ -322,6 +663,18 @@ _DEFAULT: dict[str, ArtifactStore] = {}
 _BROKEN: set[str] = set()  # REPRO_CACHE_DIR paths that failed to initialise
 
 
-__all__ = ["ArtifactStore", "ENV_DIR", "FORMAT", "compiler_signature",
-           "default_store", "entry_from_artifact", "reports_from_entry",
+def entry_cycles(entry: dict) -> float | None:
+    """The default-pack analytic cycle count recorded in a store entry —
+    what the sweep coordinator reports for deduplicated work units
+    without restoring (or even LRU-bumping) the artifact."""
+    try:
+        rep = entry["reports"][str(int(bool(entry["pack"])))]
+        return float(rep["cycles"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+__all__ = ["ArtifactStore", "ENV_DIR", "FORMAT", "FRESH_GRACE", "FileLock",
+           "SweepJournal", "compiler_signature", "default_store",
+           "entry_cycles", "entry_from_artifact", "reports_from_entry",
            "resolve"]

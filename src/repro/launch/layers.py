@@ -56,27 +56,35 @@ def lm_layer_gemms(cfg, tokens: int, lm_head: bool = True) -> list[LayerGemm]:
 
 def compile_layer_gemms(cfg, tokens: int, target: str = "hvx",
                         options: "repro.CompileOptions | None" = None,
+                        parallel: int | None = None,
                         ) -> list[tuple[LayerGemm, "repro.CompiledArtifact"]]:
     """Compile every block GEMM of ``cfg`` through ``repro.compile_many``
     (shared content-addressed cache + optional disk store/search).
 
     ``target`` is any ``repro.targets`` name, including derived-variant
     names (``"dnnweaver@pe=32x32"``) — serving/training jobs can report
-    cycles against a perturbed accelerator without code changes."""
+    cycles against a perturbed accelerator without code changes.
+
+    ``parallel=N`` (with a disk store configured) fans cold compiles out
+    across N worker processes; ``LayerGemm`` records serialise into sweep
+    work units, so big-vocab heads and deep FFN stacks compile
+    concurrently while results stream back through the shared store."""
     gemms = lm_layer_gemms(cfg, tokens)
-    arts = repro.compile_many([g.build for g in gemms], target=target,
-                              options=options)
+    arts = repro.compile_many(gemms, target=target, options=options,
+                              parallel=parallel)
     return list(zip(gemms, arts))
 
 
 def variant_report(cfg, tokens: int, targets: "list[str]",
-                   options: "repro.CompileOptions | None" = None) -> str:
+                   options: "repro.CompileOptions | None" = None,
+                   parallel: int | None = None) -> str:
     """Per-GEMM cycles across several targets / architecture variants in
     one batched heterogeneous ``compile_many`` sweep — the design-space
-    view of a serving config."""
+    view of a serving config (``parallel=N`` shards it across worker
+    processes over the shared artifact store)."""
     gemms = lm_layer_gemms(cfg, tokens)
-    pairs = [(g.build, t) for t in targets for g in gemms]
-    arts = repro.compile_many(pairs, options=options)
+    pairs = [(g, t) for t in targets for g in gemms]
+    arts = repro.compile_many(pairs, options=options, parallel=parallel)
     width = max(len(g.name) for g in gemms)
     lines = [f"[covenant] {cfg.name} variants, tokens={tokens}"]
     header = "  " + " " * width + "".join(f" {t:>24s}" for t in targets)

@@ -37,3 +37,13 @@ def test_compile_layers_sweep():
     r = _run("examples/compile_layers.py", timeout=1200)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "BERT-LG-GEMM1" in r.stdout
+
+
+@pytest.mark.slow
+def test_sweep_variants_example(tmp_path):
+    r = _run("examples/sweep_variants.py", timeout=1200,
+             extra=("--workers", "2", "--store", str(tmp_path / "store")))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "each compiled exactly once" in r.stdout
+    warm = [l for l in r.stdout.splitlines() if l.startswith("[warm]")]
+    assert warm and ", 0 pipeline stages run" in warm[0]

@@ -333,6 +333,137 @@ print(json.dumps({
 """
 
 
+# Two processes hammer one store whose size bound forces an eviction scan
+# on every put.  The regression this guards: concurrent LRU evictions used
+# to delete *each other's* just-written entries (both processes scan, both
+# see the other's fresh file as LRU-eligible).  The hardened store
+# serialises eviction behind a FileLock and never evicts a foreign entry
+# younger than FRESH_GRACE, so every process must still see its own entry
+# immediately after each put.
+_EVICT_STRESS = r"""
+import hashlib, os, sys
+from repro.core.store import ArtifactStore
+
+root, tag = sys.argv[1], sys.argv[2]
+st = ArtifactStore(root, max_bytes=2000)  # a handful of entries
+pad = "x" * 400
+for i in range(30):
+    key = hashlib.sha256(f"{tag}-{i}".encode()).hexdigest()
+    st.put(key, {"reports": {}, "pack": True, "pad": pad})
+    if not os.path.exists(os.path.join(root, key + ".json")):
+        print(f"LOST fresh entry {tag}-{i}", file=sys.stderr)
+        sys.exit(1)
+print(f"{tag} ok evictions={st.stats['evictions']}")
+"""
+
+
+def test_concurrent_evicting_writers_never_lose_fresh_entries(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _EVICT_STRESS, str(tmp_path / "shared"), tag],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env, cwd=ROOT) for tag in ("alpha", "beta")]
+    for p in procs:
+        out, err = p.communicate(timeout=600)
+        assert p.returncode == 0, err
+        assert "ok" in out
+
+
+def test_own_entries_still_evict_under_size_pressure(tmp_path):
+    """The foreign-fresh grace window must not break the single-process
+    size bound: a process's own fresh entries remain evictable."""
+    st = ArtifactStore(str(tmp_path), max_bytes=1)
+    st.put("a" * 64, {"reports": {}, "pack": True})
+    st.put("b" * 64, {"reports": {}, "pack": True})
+    assert st.keys() == ["b" * 64]
+    assert st.stats["evictions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# locks, claims, journal, gc
+# ---------------------------------------------------------------------------
+
+
+def test_filelock_excludes_and_breaks_stale(tmp_path):
+    from repro.core.store import FileLock
+    path = str(tmp_path / "x.lock")
+    a = FileLock(path)
+    assert a.acquire()
+    assert not FileLock(path).acquire(timeout=0.05)  # held: excluded
+    a.release()
+    b = FileLock(path, stale_timeout=60)
+    assert b.acquire(timeout=0.05)                   # released: free again
+    # simulate a dead holder: backdate the lock past the stale timeout
+    past = os.stat(path).st_mtime - 3600
+    os.utime(path, (past, past))
+    c = FileLock(path, stale_timeout=60)
+    assert c.acquire(timeout=1.0)                    # stale lock broken
+    c.release()
+
+
+def test_claims_are_exclusive_released_and_reclaimed(tmp_path):
+    st = ArtifactStore(str(tmp_path))
+    key = "c" * 64
+    assert st.claim("s1", key, "w1")
+    assert not st.claim("s1", key, "w2")             # held by w1
+    st.release_claim("s1", key, "w2")                # not w2's to release
+    assert not st.claim("s1", key, "w2")
+    st.release_claim("s1", key, "w1")
+    assert st.claim("s1", key, "w2")                 # properly released
+    path = st._claim_path("s1", key)
+    past = os.stat(path).st_mtime - 3600
+    os.utime(path, (past, past))
+    assert st.claim("s1", key, "w3", stale_timeout=60)  # stale: reclaimed
+    assert st.stats["reclaims"] == 1
+
+
+def test_journal_is_monotonic_and_readable(tmp_path):
+    st = ArtifactStore(str(tmp_path))
+    j = st.journal("sweepid")
+    seqs = [j.append({"event": "compiled", "key": f"{i:064x}"})
+            for i in range(5)]
+    assert seqs == [1, 2, 3, 4, 5]
+    recs = j.read()
+    assert [r["seq"] for r in recs] == seqs
+    assert st.journal("sweepid").append({"event": "dedup"}) == 6
+    assert j.compile_counts() == {f"{i:064x}": 1 for i in range(5)}
+
+
+def test_gc_by_age_size_and_stale_claims(tmp_path):
+    st = ArtifactStore(str(tmp_path), max_bytes=10 ** 9)
+    young, old = "d" * 64, "e" * 64
+    for key in (young, old):
+        st.put(key, {"reports": {}, "pack": True})
+    past = os.stat(st._path(old)).st_mtime - 7200
+    os.utime(st._path(old), (past, past))
+    st.claim("s2", "f" * 64, "dead-worker")
+    cpath = st._claim_path("s2", "f" * 64)
+    os.utime(cpath, (past, past))
+    out = st.gc(max_age=3600)
+    assert out["aged"] == 1 and out["claims_reaped"] == 1
+    assert st.keys() == [young]
+    assert not os.path.exists(cpath)
+    # size-driven gc: shrink the budget so the survivor must go too
+    out = st.gc(max_bytes=0)
+    assert out["evicted"] >= 0  # keep-newest still protects one entry
+    st.put("a1" * 32, {"reports": {}, "pack": True})
+    st.put("b2" * 32, {"reports": {}, "pack": True})
+    st.gc(max_bytes=1)
+    assert len(st) >= 1  # bounded, but never empties the newest entry
+
+
+def test_peek_reads_without_stats_or_recency(store):
+    opts = repro.CompileOptions(store=store)
+    art = repro.compile(_gemm(), "hvx", opts)
+    hits_before = dict(store.stats)
+    entry = store.peek(art.key)
+    assert entry is not None and entry["key"] == art.key
+    assert store.stats == hits_before          # no stats movement
+    assert store.peek("0" * 64) is None        # miss is just None
+    from repro.core.store import entry_cycles
+    assert entry_cycles(entry) == art.cycles()
+
+
 def test_second_process_warm_sweep_is_store_hits_only(tmp_path):
     """A fresh process compiling a warm sweep executes ZERO scheduling or
     search passes — every artifact restores from the disk store."""
