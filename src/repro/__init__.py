@@ -29,6 +29,7 @@ from repro.core.driver import (ArtifactStore, CompiledArtifact,
                                register_target)
 from repro.core.pipeline import CompileOptions, Pipeline
 from repro.core.spec import ACGSpec, SpecError, acg_spec, validate_spec
+from repro.core.store import WarmStartIndex
 from repro.core.sweep import SweepReport, sweep
 
 
@@ -49,7 +50,7 @@ __all__ = [
     "ACGSpec", "ArtifactStore", "CompileOptions", "CompiledArtifact",
     "CovenantError", "Pipeline", "SearchOptions", "SearchResult",
     "SpecError", "SweepReport", "acg_spec", "available_targets",
-    "cache_stats", "check_covenant", "clear_cache", "compile",
-    "compile_key", "compile_many", "register_target", "sweep", "targets",
-    "validate_acg", "validate_spec",
+    "WarmStartIndex", "cache_stats", "check_covenant", "clear_cache",
+    "compile", "compile_key", "compile_many", "register_target", "sweep",
+    "targets", "validate_acg", "validate_spec",
 ]

@@ -360,7 +360,8 @@ def _restore_from_store(entry: dict, cdlt: Codelet, acg: ACG,
             heuristic_cycles=float(s["heuristic_cycles"]),
             evaluated=int(s["evaluated"]),
             trace=[tuple(t) for t in s.get("trace", [])],
-            strategy=s.get("strategy", "evolutionary"), point=s.get("point"))
+            strategy=s.get("strategy", "evolutionary"), point=s.get("point"),
+            seeded=int(s.get("seeded", 0)), space_sig=s.get("space_sig"))
     return art
 
 
@@ -425,7 +426,10 @@ def compile(codelet_or_layer, target="hvx",
                 return art
         _STATS["store_misses"] += 1
     if opts.search is not None:
-        res = search_schedule(cdlt, acg, options=opts, pipeline=pl)
+        # the resolved store doubles as the warm-start measurement
+        # database (SearchOptions(warm_start=True))
+        res = search_schedule(cdlt, acg, options=opts, pipeline=pl,
+                              store=store)
         ctx = res.best_ctx
         art = CompiledArtifact(codelet=ctx.cdlt, acg=acg, options=opts,
                                target=acg.name, key=key, pipeline=pl,

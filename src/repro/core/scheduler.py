@@ -311,6 +311,46 @@ class ScheduleSpace:
         return validate_tiling(self.probe, self.acg, self.plans, tiling,
                                pad_align=self.pad_align)
 
+    # -- prefix enumeration (the beam-search substrate) ----------------------
+    def loop_order(self) -> list[str]:
+        """Loop vars in nest order — the order beam search commits tiling
+        decisions (outermost first, matching ``split_loops``' tile-loop
+        order)."""
+        return [l.var for l in self.probe.loops()]
+
+    def prefixes(self, depth: int,
+                 within: "list[tuple] | None" = None) -> list[tuple]:
+        """Distinct ``depth``-long factor prefixes (in loop order) of the
+        enumerated valid tilings; ``within`` restricts to prefixes that
+        extend one of the given ``depth-1``-long prefixes.  Every returned
+        prefix has at least one valid completion by construction — beam
+        pruning never strands itself on an infeasible partial schedule."""
+        order = self.loop_order()[:depth]
+        allowed = set(within) if within is not None else None
+        out: dict[tuple, None] = {}
+        for t in self.tilings:
+            vec = tuple(t[v] for v in order)
+            if allowed is not None and vec[:-1] not in allowed:
+                continue
+            out[vec] = None
+        return sorted(out)
+
+    def committed(self, prefix: tuple) -> dict[str, int]:
+        """A factor prefix (aligned with ``loop_order()``) as a partial
+        tiling dict — the ``committed`` argument of ``cost.prefix_bound``."""
+        return dict(zip(self.loop_order(), prefix))
+
+    def signature(self) -> str:
+        """Shape identity of this schedule space: loop order, ranges and
+        divisor grids.  Two layers with equal signatures admit exactly the
+        same schedule points, so recorded best points transfer verbatim —
+        the warm-start index groups by this."""
+        import hashlib
+        parts = [f"{l.var}:{l.trips}:{','.join(map(str, self.divisors[l.var]))}"
+                 for l in self.probe.loops()]
+        parts.append(f"pad={int(self.pad_align)}")
+        return hashlib.sha256(";".join(parts).encode()).hexdigest()[:16]
+
 
 def schedule_space(cdlt: Codelet, acg: ACG, *, options=None, pipeline=None,
                    max_candidates: int = 2000) -> ScheduleSpace:

@@ -434,6 +434,7 @@ class ArtifactStore:
                 pass
         for d in self.sweep_dirs():
             shutil.rmtree(d, ignore_errors=True)
+        shutil.rmtree(os.path.join(self.root, "pins"), ignore_errors=True)
         self._approx_bytes = 0
 
     # -- sweep coordination (claims + journals) ------------------------------
@@ -556,6 +557,61 @@ class ArtifactStore:
         self._approx_bytes = self.size_bytes()
         return out
 
+    # -- race pins -----------------------------------------------------------
+    def _pin_dir(self, create: bool = True) -> str:
+        d = os.path.join(self.root, "pins")
+        if create:
+            os.makedirs(d, exist_ok=True)
+        return d
+
+    @staticmethod
+    def pin_name(layer: str, target: str) -> str:
+        raw = f"{layer}@{target}"
+        return "".join(c if c.isalnum() or c in "@=-_.,x" else "_"
+                       for c in raw)
+
+    def pin(self, name: str, record: dict) -> None:
+        """Atomically record a race winner (or any named best-point
+        digest) under ``<root>/pins/<name>.json`` — the ``searches=``
+        racing sweep pins each (layer, target)'s winning strategy/point
+        here, and the warm-start index treats pins as prime seeds."""
+        path = os.path.join(self._pin_dir(), name + _SUFFIX)
+        fd, tmp = tempfile.mkstemp(dir=self._pin_dir(), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(dict(record, pin=name, time=_time.time()), f)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+
+    def load_pin(self, name: str) -> dict | None:
+        try:
+            with open(os.path.join(self._pin_dir(create=False),
+                                   name + _SUFFIX),
+                      "r", encoding="utf-8") as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def pins(self) -> dict[str, dict]:
+        """{pin name: record} of every readable pin."""
+        out = {}
+        try:
+            names = os.listdir(self._pin_dir(create=False))
+        except FileNotFoundError:
+            return out
+        for n in sorted(names):
+            if not n.endswith(_SUFFIX):
+                continue
+            rec = self.load_pin(n[:-len(_SUFFIX)])
+            if rec is not None:
+                out[n[:-len(_SUFFIX)]] = rec
+        return out
+
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
         return len(self._entries())
@@ -578,6 +634,130 @@ class ArtifactStore:
     def __repr__(self) -> str:
         return (f"ArtifactStore({self.root!r}, entries={len(self)}, "
                 f"bytes={self.size_bytes()}/{self.max_bytes})")
+
+
+# ---------------------------------------------------------------------------
+# warm-start index — cross-layer schedule-point transfer
+# ---------------------------------------------------------------------------
+
+
+class WarmStartIndex:
+    """Best recorded schedule points, grouped by ``ScheduleSpace``
+    signature — the cross-layer warm-start substrate.
+
+    Built from the store's sweep journals (every (layer, variant, cycles)
+    point a fleet ever measured) joined with the stored entries that
+    carry the actual tiling/unroll decisions, plus race pins.  Searching
+    a new layer asks ``seeds(space, ...)``: points from layers whose
+    schedule space has the *same shape* (equal ``space.signature()``)
+    transfer verbatim; points without a recorded signature are admitted
+    only if they are valid schedule points of the requesting space.
+    """
+
+    def __init__(self):
+        # (cycles, tie, sig | None, tiling, unroll) — tie keeps sort total
+        self._points: list[tuple] = []
+
+    def add(self, cycles: float, sig: str | None, tiling: dict,
+            unroll: int, tie: str = "") -> None:
+        self._points.append((float(cycles), str(tie), sig,
+                             {str(k): int(v) for k, v in tiling.items()},
+                             int(unroll)))
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    @classmethod
+    def from_store(cls, store: "ArtifactStore",
+                   max_entries: int = 1024) -> "WarmStartIndex":
+        idx = cls()
+        if store is None:
+            return idx
+        # journal-first: sweep journals name the keys worth reading (and
+        # carry cycles for events whose entries were since evicted).
+        # Candidates are fully sorted (journalled best-cycles first, then
+        # key) BEFORE the max_entries cap, so the same store contents
+        # always build the same index regardless of directory-listing
+        # order — the reproducibility contract warm-start documents.
+        journalled: dict[str, float] = {}
+        for d in sorted(store.sweep_dirs()):
+            sweep_id = os.path.basename(d)[len(_SWEEP_PREFIX):]
+            for rec in SweepJournal(store, sweep_id).read():
+                k = rec.get("key")
+                if isinstance(k, str) and rec.get("cycles") is not None:
+                    cyc = float(rec["cycles"])
+                    journalled[k] = min(journalled.get(k, cyc), cyc)
+        unjournalled = sorted(set(store.keys()) - set(journalled))
+        keys = sorted(journalled, key=lambda k: (journalled[k], k)) \
+            + unjournalled
+        for k in keys[:max_entries]:
+            entry = store.peek(k)
+            if entry is None or not entry.get("tiling"):
+                continue
+            cycles = entry_cycles(entry)
+            if cycles is None:
+                continue
+            s = entry.get("search") or {}
+            idx.add(cycles, s.get("space_sig"), entry["tiling"],
+                    entry.get("unroll_factor", 1), tie=k)
+        for name, rec in store.pins().items():
+            point = rec.get("point") or {}
+            if point.get("tiling") and rec.get("cycles") is not None:
+                idx.add(rec["cycles"], rec.get("space_sig"),
+                        point["tiling"], point.get("unroll_factor", 1),
+                        tie=f"pin:{name}")
+        return idx
+
+    @classmethod
+    def cached_for(cls, store: "ArtifactStore") -> "WarmStartIndex":
+        """``from_store`` memoised on the store instance: rebuilding scans
+        every journal and peeks up to 1024 entries, far too much to repeat
+        per warm-started compile of a sweep.  The cache key is a cheap
+        directory census (entry/sweep/pin counts + this process's puts —
+        counting, never parsing, files), so foreign writers invalidate it
+        as soon as their files land."""
+        try:
+            n_pins = sum(n.endswith(_SUFFIX)
+                         for n in os.listdir(store._pin_dir(create=False)))
+        except FileNotFoundError:
+            n_pins = 0
+        census = (store.stats["puts"], len(store), len(store.sweep_dirs()),
+                  n_pins)
+        cached = getattr(store, "_warm_index", None)
+        if cached is not None and cached[0] == census:
+            return cached[1]
+        idx = cls.from_store(store)
+        store._warm_index = (census, idx)
+        return idx
+
+    def seeds(self, space, unroll_choices=(1, 2, 4, 8),
+              limit: int = 4) -> list[tuple[dict, int]]:
+        """Up to ``limit`` (tiling, unroll) seed points for ``space``,
+        best cycles first, exact signature matches before merely
+        compatible points.  Every returned tiling is re-validated against
+        the requesting space (Algorithm 1), so a stale or foreign record
+        can never poison a search."""
+        sig = space.signature()
+        vars_ = set(space.divisors)
+        unrolls = tuple(unroll_choices) or (1,)
+        matches, compatible = [], []
+        for cycles, tie, psig, tiling, unroll in sorted(
+                self._points, key=lambda p: (p[0], p[1])):
+            if set(tiling) != vars_ or not space.valid(tiling):
+                continue
+            u = unroll if unroll in unrolls \
+                else min(unrolls, key=lambda c: (abs(c - unroll), c))
+            (matches if psig == sig else compatible).append((tiling, u))
+        out, seen = [], set()
+        for tiling, u in matches + compatible:
+            key = (tuple(sorted(tiling.items())), u)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append((tiling, u))
+            if len(out) >= limit:
+                break
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -675,6 +855,6 @@ def entry_cycles(entry: dict) -> float | None:
 
 
 __all__ = ["ArtifactStore", "ENV_DIR", "FORMAT", "FRESH_GRACE", "FileLock",
-           "SweepJournal", "compiler_signature", "default_store",
-           "entry_cycles", "entry_from_artifact", "reports_from_entry",
-           "resolve"]
+           "SweepJournal", "WarmStartIndex", "compiler_signature",
+           "default_store", "entry_cycles", "entry_from_artifact",
+           "reports_from_entry", "resolve"]

@@ -227,12 +227,14 @@ class SweepReport:
     ``merge`` is associative and idempotent over unit keys (the best
     record per key wins: ok > failed > skipped), so partial reports from
     any number of workers — or from a re-run — combine into the same
-    final report."""
+    final report.  ``pins`` records the winners a ``race=True`` sweep
+    pinned in the store (coordinator-side, attached after the merge)."""
 
     sweep_id: str
     results: list[UnitResult] = dataclasses.field(default_factory=list)
     backend: str = "serial"
     workers: int = 1
+    pins: list[dict] = dataclasses.field(default_factory=list)
 
     # -- roll-ups ------------------------------------------------------------
     def counts(self) -> dict:
@@ -279,14 +281,27 @@ class SweepReport:
                          f"{r.opt:>24s} {r.cycles:14.0f}")
         return "\n".join(lines)
 
+    def race_table(self) -> str:
+        """Human-readable table of the strategy race winners (``pins``)."""
+        if not self.pins:
+            return "(no race winners pinned)"
+        width = max(len(p["layer"]) for p in self.pins)
+        lines = [f"{'layer':{width}s} {'target':>24s} {'winner':>14s} "
+                 f"{'cycles':>14s}"]
+        for p in sorted(self.pins, key=lambda p: (p["layer"], p["target"])):
+            lines.append(f"{p['layer']:{width}s} {p['target']:>24s} "
+                         f"{p['strategy']:>14s} {p['cycles']:14.0f}")
+        return "\n".join(lines)
+
     def summary(self) -> str:
         c = self.counts()
+        pinned = f", {len(self.pins)} winners pinned" if self.pins else ""
         return (f"sweep {self.sweep_id}: {c['units']} units via "
                 f"{self.backend}x{self.workers} — {c['ok']} ok "
                 f"({c['compiled']} compiled, {c['store']} store, "
                 f"{c['cache']} cache, {c['dedup']} dedup), "
                 f"{c['failed']} failed, {c['skipped']} skipped, "
-                f"{self.stages_run()} pipeline stages run")
+                f"{self.stages_run()} pipeline stages run{pinned}")
 
     # -- merge ---------------------------------------------------------------
     @classmethod
@@ -311,13 +326,13 @@ class SweepReport:
     # -- (de)serialisation ---------------------------------------------------
     def to_json(self) -> dict:
         return {"sweep_id": self.sweep_id, "backend": self.backend,
-                "workers": self.workers,
+                "workers": self.workers, "pins": list(self.pins),
                 "results": [r.to_json() for r in self.results]}
 
     @classmethod
     def from_json(cls, d: dict) -> "SweepReport":
         return cls(sweep_id=d["sweep_id"], backend=d.get("backend", "?"),
-                   workers=d.get("workers", 1),
+                   workers=d.get("workers", 1), pins=d.get("pins", []),
                    results=[UnitResult.from_json(r) for r in d["results"]])
 
     def save(self, path: str) -> None:
@@ -617,6 +632,58 @@ def run_external_worker(units: Sequence[WorkUnit], store, worker: str,
 
 
 # ---------------------------------------------------------------------------
+# strategy racing — pin the per-(layer, target) winner in the store
+# ---------------------------------------------------------------------------
+
+
+def _pin_race_winners(units: Sequence[WorkUnit], report: SweepReport,
+                      store, journal) -> list[dict]:
+    """Race the ``searches=`` axis: among each (layer, target)'s search
+    units pick the lowest-cycles winner, write it as a store pin
+    (``ArtifactStore.pin``) and journal a ``pinned`` event.  Returns the
+    pin records (also attached to the report).  Winners feed the
+    warm-start index, so a race permanently upgrades later searches of
+    same-shaped layers."""
+    reported = {r.key: r for r in report.ok if r.cycles is not None}
+    groups: dict[tuple[str, str], list[tuple[float, WorkUnit]]] = {}
+    for u in units:
+        if u.options.search is None:
+            continue
+        # trust the store over this worker's partial view: a unit another
+        # fleet member compiled (this report says skipped/failed) must
+        # still race, or a drain-timeout could pin the losing strategy
+        r = reported.get(u.key)
+        cycles = r.cycles if r is not None else \
+            store_mod.entry_cycles(store.peek(u.key) or {})
+        if cycles is None:
+            continue
+        groups.setdefault((u.layer, u.target), []).append((cycles, u))
+    pins: list[dict] = []
+    for (layer, target), cs in sorted(groups.items()):
+        # a rival strategy failing must not cost the group its pin: the
+        # surviving strategies still raced (the plan guaranteed >= 2),
+        # and the best of them is strictly better than no record at all
+        cycles, unit = min(cs, key=lambda cu: (cu[0], cu[1].key))
+        entry = store.peek(unit.key) or {}
+        search = entry.get("search") or {}
+        rec = {"layer": layer, "target": target, "key": unit.key,
+               "strategy": unit.options.search.strategy,
+               "opt": unit.opt, "cycles": cycles,
+               "point": {"tiling": entry.get("tiling"),
+                         "unroll_factor": entry.get("unroll_factor", 1)},
+               "space_sig": search.get("space_sig"),
+               "raced": sorted(u.opt for _, u in cs)}
+        store.pin(store.pin_name(layer, target), rec)
+        pins.append(rec)
+        _journal_safe(journal, {"event": "pinned", "key": unit.key,
+                                "layer": layer, "target": target,
+                                "worker": "coordinator",
+                                "cycles": cycles,
+                                "strategy": rec["strategy"]})
+    return pins
+
+
+# ---------------------------------------------------------------------------
 # the coordinator
 # ---------------------------------------------------------------------------
 
@@ -626,6 +693,7 @@ def sweep(layers: Iterable, targets: Sequence[str] = ("hvx",), *,
           searches: Sequence[SearchOptions | None] | None = None,
           workers: int = 1, store=None, backend: str | None = None,
           sweep_id: str | None = None, dedup: bool = True,
+          race: bool = False,
           stale_claim_timeout: float = 60.0,
           mp_start: str | None = None) -> SweepReport:
     """Run a sweep plan and merge the outcome into a ``SweepReport``.
@@ -641,19 +709,36 @@ def sweep(layers: Iterable, targets: Sequence[str] = ("hvx",), *,
     (reported, not dispatched) and every worker compile lands in the store
     and the sweep journal.  ``backend`` defaults to ``process`` when
     ``workers > 1`` else ``serial``; ``external`` turns this process into
-    one claim-based worker of an independently launched fleet."""
+    one claim-based worker of an independently launched fleet.
+
+    ``race=True`` treats the ``searches=`` axis as a per-layer strategy
+    race: every strategy runs under its own (equal) budget, and each
+    (layer, target)'s lowest-cycles winner is *pinned* in the store
+    (``report.pins`` / ``report.race_table()``) for later compiles and
+    warm-started searches to reuse."""
     if store is None and options is not None \
             and getattr(options, "store", None) is not None:
         store = options.store  # honour the compile()/compile_many() idiom
     st = store_mod.resolve(store)
+    if race:
+        if st is None:
+            raise ValueError("race=True needs a shared ArtifactStore to "
+                             "pin winners in")
+        if not searches or sum(s is not None for s in searches) < 2:
+            raise ValueError("race=True needs a searches= axis of at "
+                             "least two strategies to race")
     units = expand_plan(layers, targets, options=options, searches=searches)
     sweep_id = sweep_id or plan_id(units)
     if backend is None:
         backend = "process" if workers > 1 else "serial"
     if backend == "external":
-        return run_external_worker(units, st, worker=f"pid{os.getpid()}",
-                                   sweep_id=sweep_id,
-                                   stale_claim_timeout=stale_claim_timeout)
+        report = run_external_worker(units, st, worker=f"pid{os.getpid()}",
+                                     sweep_id=sweep_id,
+                                     stale_claim_timeout=stale_claim_timeout)
+        if race:
+            report.pins = _pin_race_winners(units, report, st,
+                                            st.journal(sweep_id))
+        return report
 
     results: list[UnitResult] = []
     todo: list[WorkUnit] = []
@@ -695,6 +780,8 @@ def sweep(layers: Iterable, targets: Sequence[str] = ("hvx",), *,
         sweep_id=sweep_id)
     report.backend = backend
     report.workers = workers
+    if race:
+        report.pins = _pin_race_winners(units, report, st, journal)
     return report
 
 

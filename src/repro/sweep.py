@@ -27,14 +27,14 @@ from __future__ import annotations
 import sys
 import types
 
-from repro.core.store import ArtifactStore, SweepJournal
+from repro.core.store import ArtifactStore, SweepJournal, WarmStartIndex
 from repro.core.sweep import (SweepReport, UnitResult, WorkUnit,
                               expand_plan, partition, plan_id,
                               run_external_worker, sweep, workload_of)
 
 __all__ = ["ArtifactStore", "SweepJournal", "SweepReport", "UnitResult",
-           "WorkUnit", "expand_plan", "partition", "plan_id",
-           "run_external_worker", "sweep", "workload_of"]
+           "WarmStartIndex", "WorkUnit", "expand_plan", "partition",
+           "plan_id", "run_external_worker", "sweep", "workload_of"]
 
 
 class _CallableModule(types.ModuleType):
@@ -55,20 +55,39 @@ sys.modules[__name__].__class__ = _CallableModule
 
 
 def _parse_search(text: str):
-    """``strategy=evolutionary,generations=4,population=10,seed=0`` ->
-    SearchOptions."""
-    from repro.core.search import SearchOptions
+    """``strategy=beam,generations=4,population=10,beam_width=8,
+    warm_start=1`` -> SearchOptions; a bare strategy name is shorthand
+    (``beam`` == ``strategy=beam``)."""
+    from repro.core.search import STRATEGIES, SearchOptions
     kwargs: dict = {}
     for part in text.split(","):
         if not part:
             continue
         k, _, v = part.partition("=")
         k = k.strip()
+        if not v:
+            if k in STRATEGIES:
+                kwargs["strategy"] = k
+                continue
+            raise ValueError(
+                f"--search: {k!r} is neither a registered strategy "
+                f"({sorted(STRATEGIES)}) nor a K=V setting")
         if k == "strategy":
             kwargs[k] = v.strip()
+        elif k == "warm_start":
+            kwargs[k] = v.strip().lower() in ("1", "true", "yes")
+        elif k == "patience":
+            kwargs[k] = None if v.strip().lower() == "none" else int(v)
         else:
-            kwargs[k] = int(v)
-    return SearchOptions(**kwargs)
+            try:
+                kwargs[k] = int(v)
+            except ValueError:
+                raise ValueError(
+                    f"--search: {k}={v!r} is not an integer") from None
+    try:
+        return SearchOptions(**kwargs)
+    except TypeError as e:
+        raise ValueError(f"--search: {e}") from None
 
 
 def _main(argv=None) -> int:
@@ -96,10 +115,16 @@ def _main(argv=None) -> int:
     ap.add_argument("--store", default=None,
                     help="artifact-store directory "
                          "(default: $REPRO_CACHE_DIR)")
-    ap.add_argument("--search", default=None, metavar="K=V,...",
-                    help="add a search axis, e.g. "
+    ap.add_argument("--search", action="append", default=None,
+                    metavar="K=V,...",
+                    help="add a search axis entry (repeatable), e.g. "
                          "'strategy=evolutionary,generations=4,"
-                         "population=10,seed=0'")
+                         "population=10,seed=0' or just 'beam'; repeat "
+                         "the flag to race several strategies")
+    ap.add_argument("--race", action="store_true",
+                    help="race the --search strategies per (layer, "
+                         "target) under equal budgets and pin each "
+                         "winner in the store")
     ap.add_argument("--stale-claim-timeout", type=float, default=60.0)
     ap.add_argument("--no-dedup", action="store_true",
                     help="dispatch already-stored units anyway (they "
@@ -122,19 +147,30 @@ def _main(argv=None) -> int:
     store = args.store or os.environ.get(store_mod.ENV_DIR)
     needs_store = (args.external or args.backend == "external"
                    or args.assert_unique_compiles
-                   or args.expect_store_hits or args.workers > 1)
+                   or args.expect_store_hits or args.workers > 1
+                   or args.race)
     if store is None and needs_store:
-        print("error: multi-worker / journal-asserted sweeps need a store "
-              "(--store DIR or REPRO_CACHE_DIR)", file=sys.stderr)
+        print("error: multi-worker / journal-asserted / racing sweeps need "
+              "a store (--store DIR or REPRO_CACHE_DIR)", file=sys.stderr)
         return 2
     st = store_mod.resolve(store) if store else None
     if st is not None and args.gc_max_age is not None:
         print(f"gc: {st.gc(max_age=args.gc_max_age)}")
-    searches = [_parse_search(args.search)] if args.search else None
+    try:
+        searches = [_parse_search(s) for s in args.search] if args.search \
+            else None
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.race and (not searches or len(searches) < 2):
+        print("error: --race needs at least two --search strategies",
+              file=sys.stderr)
+        return 2
     backend = args.backend or ("external" if args.external else None)
 
     report = sweep(layers, targets, searches=searches, workers=args.workers,
                    store=st, backend=backend, dedup=not args.no_dedup,
+                   race=args.race,
                    stale_claim_timeout=args.stale_claim_timeout)
 
     for r in report.results:
@@ -146,6 +182,9 @@ def _main(argv=None) -> int:
         print(line)
     print()
     print(report.best_table())
+    if args.race:
+        print()
+        print(report.race_table())
     print()
     print(report.summary())
     if args.json:

@@ -47,3 +47,13 @@ def test_sweep_variants_example(tmp_path):
     assert "each compiled exactly once" in r.stdout
     warm = [l for l in r.stdout.splitlines() if l.startswith("[warm]")]
     assert warm and ", 0 pipeline stages run" in warm[0]
+
+
+@pytest.mark.search
+def test_warm_start_search_example(tmp_path):
+    r = _run("examples/warm_start_search.py", timeout=1200,
+             extra=("--store", str(tmp_path / "store")))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "winners pinned" in r.stdout
+    assert "seed(s) injected" in r.stdout
+    assert "warm-start index:" in r.stdout

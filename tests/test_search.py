@@ -1,14 +1,20 @@
 """Search-based scheduling (core/search.py): a driver subsystem — never
 worse than the heuristic, functionally correct, deterministic per seed,
-strategy-pluggable, and materialised exclusively through the pipeline."""
+strategy-pluggable, and materialised exclusively through the pipeline.
+PR 5 additions: the cost-bound-guided ``beam`` strategy, transfer-aware
+mutation, warm-starting from the artifact store, and the budget-matched
+acceptance comparisons."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 import repro
 from repro.core import interp, library, targets
-from repro.core.search import (STRATEGIES, SearchOptions, _mutate,
-                               search_schedule)
+from repro.core.search import (STRATEGIES, SearchOptions, SearchResult,
+                               _mutate, search_schedule)
 from repro.core.scheduler import schedule_space
+from repro.core.store import ArtifactStore
 
 
 @pytest.mark.parametrize("target", ["hvx", "dnnweaver"])
@@ -58,11 +64,11 @@ def test_search_deterministic_trace():
 
 
 def test_strategy_registry_complete_and_never_worse():
-    assert {"evolutionary", "random", "grid",
+    assert {"beam", "evolutionary", "random", "grid",
             "exhaustive"} <= set(STRATEGIES)
     acg = targets.get_target("hvx")
     results = {}
-    for strategy in ("evolutionary", "random", "grid", "exhaustive"):
+    for strategy in ("beam", "evolutionary", "random", "grid", "exhaustive"):
         res = search_schedule(library.gemm(8, 16, 12, in_dtype="u8"), acg,
                               strategy=strategy, generations=2,
                               population=6, seed=0)
@@ -118,6 +124,230 @@ def test_search_space_is_pipeline_fed():
         acg.extra_passes.clear()
     assert seen == ["early", "late"]
     assert space.tilings and all(space.valid(t) for t in space.tilings[:20])
+
+
+# ---------------------------------------------------------------------------
+# PR 5: determinism regression — every registered strategy, byte-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.search
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_every_strategy_trace_byte_identical_per_seed(strategy):
+    """Same seed => byte-identical ``SearchResult.trace`` (repr compare),
+    same winner, same evaluation count — for EVERY registered strategy,
+    including the rng-free ``beam``.  This is the invariant that makes
+    store entries reproducible across processes and sweep backends."""
+    acg = targets.get_target("dnnweaver")
+
+    def run():
+        return search_schedule(library.gemm(24, 32, 16, in_dtype="u8"), acg,
+                               strategy=strategy, generations=3,
+                               population=8, seed=11, max_candidates=256)
+
+    a, b = run(), run()
+    assert repr(a.trace).encode() == repr(b.trace).encode()
+    assert a.point == b.point
+    assert a.evaluated == b.evaluated
+    assert a.best_cycles == b.best_cycles
+
+
+# ---------------------------------------------------------------------------
+# PR 5: SearchResult.gain degenerate edge
+# ---------------------------------------------------------------------------
+
+
+def test_gain_returns_zero_at_the_zero_cycle_optimum_edge():
+    """best == baseline == 0 (the seed point already hits the space
+    optimum of a degenerate zero-cost schedule) must report 0.0, not
+    divide by zero (or the old near-zero-division blow-up)."""
+    def res(best, heur):
+        return SearchResult(best=None, best_cycles=best,
+                            heuristic_cycles=heur, evaluated=1, trace=[])
+
+    assert res(0.0, 0.0).gain == 0.0
+    assert res(0.0, 10.0).gain == float("inf")  # genuinely unbounded
+    assert res(50.0, 100.0).gain == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# PR 5: transfer-aware mutation
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_prefer_biases_but_stays_neighbouring():
+    """With a ``prefer`` pool, every tiling mutation moves one of the
+    preferred loops (still one divisor step, still valid); unroll flips
+    are unaffected."""
+    import random
+    acg = targets.get_target("hvx")
+    space = schedule_space(library.gemm(24, 32, 16, in_dtype="u8"), acg)
+    base = tuple(sorted(space.tilings[0].items()))
+    rng = random.Random(7)
+    moved = set()
+    for _ in range(60):
+        new_t, new_u = _mutate((base, 4), space, (1, 2, 4, 8), rng,
+                               prefer=("k",))
+        changed = [(v, f) for (v, f), (v0, f0) in zip(new_t, base)
+                   if f != f0]
+        if new_u == 4 and changed:
+            assert len(changed) == 1
+            moved.add(changed[0][0])
+    assert moved == {"k"}
+
+
+def test_hot_vars_only_for_transfer_dominated_reports():
+    """_hot_vars consults the evaluated parent's CostReport: a compute-
+    dominated parent gets no bias, a transfer-dominated one gets the
+    dominant operand's loops."""
+    from repro.core.cost import CostReport
+    from repro.core.search import _hot_vars
+    acg = targets.get_target("hvx")
+    space = schedule_space(library.gemm(24, 32, 16, in_dtype="u8"), acg)
+    pt = (tuple(sorted(space.tilings[0].items())), 4)
+
+    def fake_eval(reports):
+        def evaluate(p):
+            return 0.0
+        evaluate.reports = reports
+        return evaluate
+
+    mem_heavy = CostReport(cycles=10, compute_cycles=1, transfer_cycles=9,
+                           overhead_cycles=0, compute_invocations=1,
+                           transfer_mnemonics=9)
+    cpu_heavy = CostReport(cycles=10, compute_cycles=9, transfer_cycles=1,
+                           overhead_cycles=0, compute_invocations=9,
+                           transfer_mnemonics=1)
+    assert _hot_vars(space, pt, fake_eval({pt: mem_heavy}), {})
+    assert _hot_vars(space, pt, fake_eval({pt: cpu_heavy}), {}) == []
+
+
+# ---------------------------------------------------------------------------
+# PR 5: warm-starting from the artifact store
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.search
+def test_warm_start_seeds_from_store_and_never_hurts(tmp_path):
+    """A store populated by a previous search seeds a later search of the
+    same-shaped layer: seeds are injected (``seeded > 0``), the result is
+    at least as good as cold, and a cold store yields zero seeds."""
+    repro.clear_cache()
+    store = ArtifactStore(str(tmp_path / "store"))
+    pre = SearchOptions(strategy="beam", generations=3, population=8,
+                        seed=0, max_candidates=256)
+    repro.compile("DLRM-FC2", "hvx",
+                  repro.CompileOptions(search=pre, store=store))
+
+    warm = SearchOptions(strategy="evolutionary", generations=3,
+                         population=8, seed=9, max_candidates=256,
+                         warm_start=True)
+    cold = dataclasses.replace(warm, warm_start=False)
+    a_w = repro.compile("DLRM-FC2", "hvx",
+                        repro.CompileOptions(search=warm, store=store))
+    a_c = repro.compile("DLRM-FC2", "hvx",
+                        repro.CompileOptions(search=cold, store=store))
+    assert a_w.search.seeded > 0
+    assert a_c.search.seeded == 0
+    assert a_w.search.best_cycles <= a_c.search.best_cycles + 1e-9
+    assert a_w.key != a_c.key       # warm_start is part of the identity
+
+    # an empty store warm-starts to nothing (and must not fail)
+    repro.clear_cache()
+    empty = ArtifactStore(str(tmp_path / "empty"))
+    a_e = repro.compile("DLRM-FC2", "hvx",
+                        repro.CompileOptions(search=warm, store=empty))
+    assert a_e.search.seeded == 0
+
+
+@pytest.mark.search
+def test_warm_start_entry_roundtrips_seeded_and_sig(tmp_path):
+    """The store entry persists ``seeded``/``space_sig``; a fresh-process
+    restore reports them without re-searching."""
+    repro.clear_cache()
+    store = ArtifactStore(str(tmp_path / "store"))
+    sopts = SearchOptions(strategy="beam", generations=2, population=6,
+                          seed=0, max_candidates=128)
+    art = repro.compile("DLRM-FC3", "hvx",
+                        repro.CompileOptions(search=sopts, store=store))
+    sig = art.search.space_sig
+    assert sig
+    repro.clear_cache()
+    warm = repro.compile("DLRM-FC3", "hvx",
+                         repro.CompileOptions(search=sopts, store=store))
+    assert warm.ctx.executed == []          # zero-stage restore
+    assert warm.search.space_sig == sig
+    assert warm.search.seeded == art.search.seeded
+
+
+# ---------------------------------------------------------------------------
+# PR 5: budget-matched acceptance — beam vs evolutionary
+# ---------------------------------------------------------------------------
+
+FAST_LAYERS = ["DLRM-FC1", "DLRM-FC2", "DLRM-FC3"]
+
+
+@pytest.mark.search
+@pytest.mark.parametrize("target", ["hvx", "dnnweaver"])
+def test_beam_budget_matched_on_dlrm_subset(target):
+    """The CI-sized acceptance: on the DLRM subset, beam at an equal
+    evaluation budget finds cycles <= evolutionary's."""
+    acg = targets.get_target(target)
+    for key in FAST_LAYERS:
+        cdlt = library.paper_layer(key)
+        rb = search_schedule(cdlt, acg, strategy="beam", generations=2,
+                             population=8, seed=0, max_candidates=512)
+        re_ = search_schedule(cdlt, acg, strategy="evolutionary",
+                              generations=2, population=8, seed=0,
+                              max_candidates=512)
+        assert rb.evaluated <= 16           # the shared budget
+        assert rb.best_cycles <= re_.best_cycles + 1e-9, (key, target)
+
+
+@pytest.mark.slow
+@pytest.mark.search
+@pytest.mark.parametrize("target", ["hvx", "dnnweaver"])
+def test_beam_matches_or_beats_evolutionary_every_paper_layer(target):
+    """Acceptance: on every Table-2 layer x both eval targets, beam under
+    an equal ``evaluate()`` budget matches or beats evolutionary."""
+    acg = targets.get_target(target)
+    budget = 16
+    for spec in library.PAPER_LAYERS:
+        rb = search_schedule(spec.build(), acg, strategy="beam",
+                             generations=2, population=8, seed=0,
+                             max_candidates=512)
+        re_ = search_schedule(spec.build(), acg, strategy="evolutionary",
+                              generations=2, population=8, seed=0,
+                              max_candidates=512)
+        assert rb.evaluated <= budget
+        assert rb.best_cycles <= re_.best_cycles + 1e-9, (
+            spec.key, target, rb.best_cycles, re_.best_cycles)
+
+
+@pytest.mark.slow
+@pytest.mark.search
+def test_warm_started_evolutionary_converges_in_fewer_evaluations(tmp_path):
+    """Acceptance: with the store carrying a previous search's best point,
+    warm-started evolutionary converges earlier than cold — strictly
+    shorter trace (patience cuts it at the plateau) and strictly fewer
+    evaluations, at an equal-or-better final schedule."""
+    repro.clear_cache()
+    store = ArtifactStore(str(tmp_path / "store"))
+    pre = SearchOptions(strategy="beam", generations=4, population=10,
+                        seed=0, max_candidates=256)
+    repro.compile("InceptionV3-FC1", "hvx",
+                  repro.CompileOptions(search=pre, store=store))
+    base = SearchOptions(strategy="evolutionary", generations=10,
+                         population=10, seed=3, max_candidates=256,
+                         patience=2)
+    warm = dataclasses.replace(base, warm_start=True)
+    a_w = repro.compile("InceptionV3-FC1", "hvx",
+                        repro.CompileOptions(search=warm, store=store))
+    a_c = repro.compile("InceptionV3-FC1", "hvx",
+                        repro.CompileOptions(search=base, store=store))
+    assert len(a_w.search.trace) < len(a_c.search.trace)
+    assert a_w.search.evaluated < a_c.search.evaluated
+    assert a_w.search.best_cycles <= a_c.search.best_cycles + 1e-9
 
 
 def test_driver_search_option_every_paper_layer_both_targets():

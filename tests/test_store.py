@@ -485,3 +485,98 @@ def test_second_process_warm_sweep_is_store_hits_only(tmp_path):
     assert warm["stats"]["store_misses"] == 0
     assert warm["stages_run"] == 0          # no scheduling/search pass ran
     assert warm["cycles"] == cold["cycles"]
+
+
+# ---------------------------------------------------------------------------
+# PR 5: warm-start index + race pins
+# ---------------------------------------------------------------------------
+
+
+def test_warm_start_index_built_from_journal_and_entries(store):
+    """The index joins sweep-journal events with stored entries: every
+    journaled compile with a tiling becomes a candidate point, and
+    ``seeds`` returns only points valid for the requesting space."""
+    from repro.core.scheduler import schedule_space
+    from repro.core.store import WarmStartIndex
+
+    report = repro.sweep(["DLRM-FC2", "DLRM-FC3"], ["hvx"], store=store)
+    assert report.counts()["ok"] == 2
+    idx = WarmStartIndex.from_store(store)
+    assert len(idx) == 2
+
+    acg = repro.targets.get("hvx")
+    space = schedule_space(library.paper_layer("DLRM-FC2"), acg)
+    seeds = idx.seeds(space, (1, 2, 4, 8), limit=4)
+    assert seeds
+    for tiling, unroll in seeds:
+        assert set(tiling) == set(space.divisors)
+        assert space.valid(tiling)
+        assert unroll in (1, 2, 4, 8)
+
+
+def test_warm_start_index_prefers_exact_space_signature(store):
+    """Searched entries record their space signature; seeds from the SAME
+    shape rank before merely-compatible foreign points."""
+    from repro.core.scheduler import schedule_space
+    from repro.core.store import WarmStartIndex
+    from repro.core.search import SearchOptions
+
+    sopts = SearchOptions(strategy="beam", generations=2, population=6,
+                          seed=0, max_candidates=128)
+    art = repro.compile("DLRM-FC4", "hvx",
+                        repro.CompileOptions(search=sopts, store=store))
+    sig = art.search.space_sig
+    idx = WarmStartIndex.from_store(store)
+    acg = repro.targets.get("hvx")
+    space = schedule_space(library.paper_layer("DLRM-FC4"), acg)
+    assert space.signature() == sig
+    seeds = idx.seeds(space, (1, 2, 4, 8), limit=1)
+    assert seeds and seeds[0][0] == art.search.point["tiling"]
+
+
+def test_pins_roundtrip_atomically_and_clear(store):
+    rec = {"layer": "L", "target": "hvx", "key": "a" * 64,
+           "strategy": "beam", "cycles": 123.0,
+           "point": {"tiling": {"m": 4}, "unroll_factor": 2}}
+    name = store.pin_name("L", "hvx@pe=8x8")
+    assert "/" not in name
+    store.pin(name, rec)
+    got = store.load_pin(name)
+    assert got is not None and got["cycles"] == 123.0
+    assert got["pin"] == name
+    assert name in store.pins()
+    assert store.load_pin("nope") is None
+    store.clear()
+    assert store.pins() == {}
+
+
+def test_warm_start_index_consumes_pins(store):
+    from repro.core.scheduler import schedule_space
+    from repro.core.store import WarmStartIndex
+
+    acg = repro.targets.get("hvx")
+    space = schedule_space(library.paper_layer("DLRM-FC4"), acg)
+    tiling = space.tilings[0]
+    store.pin(store.pin_name("DLRM-FC4", "hvx"),
+              {"layer": "DLRM-FC4", "target": "hvx", "key": "0" * 64,
+               "strategy": "beam", "cycles": 1.0,
+               "space_sig": space.signature(),
+               "point": {"tiling": tiling, "unroll_factor": 4}})
+    idx = WarmStartIndex.from_store(store)
+    seeds = idx.seeds(space, (1, 2, 4, 8), limit=2)
+    assert (tiling, 4) in [(t, u) for t, u in seeds]
+
+
+def test_warm_start_index_rejects_foreign_shapes(store):
+    """Points whose loop-var set does not match the requesting space are
+    never returned — a conv schedule cannot seed a GEMM."""
+    from repro.core.scheduler import schedule_space
+    from repro.core.store import WarmStartIndex
+
+    repro.compile(library.elementwise("ADD", 64, "i32"), "hvx",
+                  repro.CompileOptions(store=store))
+    idx = WarmStartIndex.from_store(store)
+    assert len(idx) >= 1
+    acg = repro.targets.get("hvx")
+    space = schedule_space(_gemm(), acg)
+    assert idx.seeds(space, (1, 2, 4, 8), limit=4) == []

@@ -300,3 +300,157 @@ def test_cli_expect_store_hits_fails_cold(tmp_path):
     r = _run_cli(tmp_path, "--expect-store-hits")
     assert r.returncode == 1
     assert "FAIL" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# PR 5: strategy racing + cross-backend determinism
+# ---------------------------------------------------------------------------
+
+RACE_SEARCHES = [
+    repro.SearchOptions(strategy="beam", generations=2, population=6,
+                        seed=0, max_candidates=128),
+    repro.SearchOptions(strategy="evolutionary", generations=2,
+                        population=6, seed=0, max_candidates=128),
+]
+
+
+@pytest.mark.search
+def test_race_pins_winner_per_layer_and_journals_exactly_once(store):
+    layers = ["DLRM-FC3", "DLRM-FC4"]
+    report = repro.sweep(layers, ["hvx"], store=store,
+                         searches=RACE_SEARCHES, race=True)
+    assert report.counts()["ok"] == 4          # 2 layers x 2 strategies
+    assert len(report.pins) == len(layers)
+    counts = store.journal(report.sweep_id).compile_counts()
+    assert len(counts) == 4                    # one per (layer, strategy)
+    assert set(counts.values()) == {1}         # ...compiled exactly once
+    by_layer = {r.layer: [] for r in report.ok}
+    for r in report.ok:
+        by_layer[r.layer].append(r)
+    for pin in report.pins:
+        assert pin["cycles"] == min(r.cycles for r in by_layer[pin["layer"]])
+        assert pin["strategy"] in ("beam", "evolutionary")
+        assert sorted(pin["raced"]) == pin["raced"] and len(pin["raced"]) == 2
+        assert store.load_pin(store.pin_name(pin["layer"], "hvx")) is not None
+    assert "winner" in report.race_table()
+
+    # a warm re-race changes nothing: all dedup, same winners, still once
+    warm = repro.sweep(layers, ["hvx"], store=store,
+                       searches=RACE_SEARCHES, race=True)
+    assert warm.counts()["dedup"] == 4
+    assert [p["key"] for p in warm.pins] == [p["key"] for p in report.pins]
+    counts = store.journal(report.sweep_id).compile_counts()
+    assert set(counts.values()) == {1}
+
+
+def test_race_requires_store_and_two_strategies(store):
+    with pytest.raises(ValueError, match="ArtifactStore"):
+        repro.sweep(["DLRM-FC4"], ["hvx"], searches=RACE_SEARCHES,
+                    race=True, store=None)
+    with pytest.raises(ValueError, match="two"):
+        repro.sweep(["DLRM-FC4"], ["hvx"], store=store, race=True,
+                    searches=[RACE_SEARCHES[0]])
+
+
+def test_search_options_json_roundtrip_with_pr5_fields():
+    from repro.core.sweep import options_from_json, options_to_json
+    sopts = repro.SearchOptions(strategy="beam", beam_width=5,
+                                warm_start=True, patience=3)
+    opts = repro.CompileOptions(search=sopts)
+    rt = options_from_json(json.loads(json.dumps(options_to_json(opts))))
+    assert rt.search == sopts
+    assert rt.fingerprint() == opts.fingerprint()
+
+
+@pytest.mark.search
+def test_search_traces_byte_identical_across_fork_and_spawn(tmp_path):
+    """Same plan, same seed, different worker start methods: the stored
+    search digests (trace, winner, cycles) must be byte-identical — the
+    determinism contract across sweep backends."""
+    import multiprocessing as mp
+
+    methods = [m for m in ("fork", "spawn")
+               if m in mp.get_all_start_methods()]
+    if len(methods) < 2:
+        pytest.skip("platform offers a single mp start method")
+    digests = {}
+    for method in methods:
+        repro.clear_cache()
+        st = ArtifactStore(str(tmp_path / method))
+        report = repro.sweep(["DLRM-FC4"], ["hvx"], store=st, workers=2,
+                             searches=RACE_SEARCHES, backend="process",
+                             mp_start=method)
+        assert report.counts()["ok"] == 2, report.summary()
+        entries = {}
+        for r in report.ok:
+            s = (st.peek(r.key) or {}).get("search")
+            assert s is not None
+            entries[r.key] = json.dumps(s, sort_keys=True)
+        digests[method] = entries
+    assert digests[methods[0]] == digests[methods[1]]
+    repro.clear_cache()
+
+
+@pytest.mark.search
+def test_cli_race_prints_winners_and_asserts_unique(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_CACHE_DIR=str(tmp_path / "store"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.sweep",
+         "--layers", "DLRM-FC4", "--targets", "hvx",
+         "--search", "strategy=beam,generations=2,population=6,seed=0,"
+                     "max_candidates=128",
+         "--search", "strategy=evolutionary,generations=2,population=6,"
+                     "seed=0,max_candidates=128",
+         "--race", "--assert-unique-compiles"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "winner" in r.stdout
+    assert "compiled exactly once" in r.stdout
+
+
+def test_cli_race_needs_two_searches(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_CACHE_DIR=str(tmp_path / "store"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.sweep", "--layers", "DLRM-FC4",
+         "--targets", "hvx", "--search", "beam", "--race"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    assert r.returncode == 2
+    assert "two" in r.stderr
+
+
+def test_race_pins_survivor_when_rival_strategy_fails(store):
+    """A rival strategy's unit failing must not cost the (layer, target)
+    its pin: the surviving strategy's best result is pinned."""
+    import dataclasses
+
+    from repro.core.sweep import _pin_race_winners
+
+    units = expand_plan(["DLRM-FC4"], ["hvx"], searches=RACE_SEARCHES)
+    ok_unit, failed_unit = units
+    art = repro.compile("DLRM-FC4", "hvx",
+                        dataclasses.replace(ok_unit.options, store=store))
+    report = SweepReport(sweep_id="x", results=[
+        UnitResult(key=ok_unit.key, layer="DLRM-FC4", target="hvx",
+                   opt=ok_unit.opt, status="ok", source="compiled",
+                   cycles=art.cycles()),
+        UnitResult(key=failed_unit.key, layer="DLRM-FC4", target="hvx",
+                   opt=failed_unit.opt, status="failed", error="boom"),
+    ])
+    pins = _pin_race_winners(units, report, store, None)
+    assert len(pins) == 1
+    assert pins[0]["key"] == ok_unit.key
+
+
+def test_cli_rejects_malformed_search_spec(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_CACHE_DIR=str(tmp_path / "store"))
+    for bad in ("bem", "generations=lots"):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.sweep", "--layers", "DLRM-FC4",
+             "--targets", "hvx", "--search", bad],
+            capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+        assert r.returncode == 2, (bad, r.stdout, r.stderr)
+        assert "error: --search" in r.stderr
+        assert "Traceback" not in r.stderr
